@@ -1,0 +1,57 @@
+"""Shared benchmark scaffolding.
+
+Each benchmark module exposes ``run() -> list[Row]``; benchmarks/run.py
+prints ``name,us_per_call,derived`` CSV (one line per row) and tees a
+human-readable table. Models executed on CPU are reduced GPT-Neo variants;
+paper-scale numbers come from the calibrated simulator (constants chosen to
+match Table 1's effective mobile throughput) and are labelled `sim:`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.configs.gptneo import GPTNEO_S, GPTNEO_1_3B, GPTNEO_2_7B
+from repro.core.capacity import HWSpec
+
+# mobile-effective constants (paper Table 1: GPTN-S infer 337 ms @ 16 GMACs
+# -> ~0.1 TFLOP/s sustained; flash ~1 GB/s; texture-upload path ~2 GB/s)
+MOBILE_HW = HWSpec(peak_flops=1e11, hbm_bw=3e10, stream_bw=2e9, disk_bw=1e9)
+
+# CPU-executable model zoo (reduced GPT-Neo family, same topology)
+BENCH_MODELS = {
+    "gptneo-s": GPTNEO_S,
+    "gptneo-s-8L": replace(GPTNEO_S, name="gptneo-s-8L", num_layers=8),
+    "gptneo-mid": replace(GPTNEO_S, name="gptneo-mid", num_layers=16,
+                          d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096),
+}
+# paper-scale configs (simulator only)
+PAPER_MODELS = {
+    "GPTN-S": GPTNEO_S,
+    "GPTN-1.3B": GPTNEO_1_3B,
+    "GPTN-2.7B": GPTNEO_2_7B,
+}
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

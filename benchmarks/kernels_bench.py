@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference wall time on
+CPU — correctness-scale only (TPU timings come from the roofline model);
+also reports the oracle max-error per kernel as the correctness gate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (256, 512), jnp.float32)
+    b = jax.random.normal(key, (512, 256), jnp.float32)
+    err = float(jnp.max(jnp.abs(ops.matmul(a, b) - ref.matmul_ref(a, b))))
+    t = timeit(lambda: ops.matmul(a, b).block_until_ready())
+    rows.append(Row("kernel/streamed_matmul", t * 1e6, f"err={err:.1e}"))
+
+    q = jax.random.normal(key, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    err = float(jnp.max(jnp.abs(
+        ops.attention(q, k, v, block_q=128, block_kv=128)
+        - ref.flash_attention_ref(q, k, v))))
+    t = timeit(lambda: ops.attention(q, k, v, block_q=128,
+                                     block_kv=128).block_until_ready())
+    rows.append(Row("kernel/flash_attention", t * 1e6, f"err={err:.1e}"))
+
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 2)))
+    aa = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.5)
+    bb = jax.random.normal(ks[3], (1, 128, 16), jnp.float32)
+    cc = jax.random.normal(ks[4], (1, 128, 16), jnp.float32)
+    d = jnp.ones((2,))
+    err = float(jnp.max(jnp.abs(ops.ssd(x, dt, aa, bb, cc, d, chunk=32)
+                                - ref.ssd_ref(x, dt, aa, bb, cc, d))))
+    t = timeit(lambda: ops.ssd(x, dt, aa, bb, cc, d,
+                               chunk=32).block_until_ready())
+    rows.append(Row("kernel/ssd_scan", t * 1e6, f"err={err:.1e}"))
+
+    w = jax.random.normal(key, (256, 512), jnp.float32)
+    t = timeit(lambda: ops.pack(w).block_until_ready())
+    back = ops.unpack(np.asarray(ops.pack(w)), (256, 512))
+    err = float(np.max(np.abs(back - np.asarray(w))))
+    rows.append(Row("kernel/layout_pack", t * 1e6, f"roundtrip_err={err:.1e}"))
+    return rows

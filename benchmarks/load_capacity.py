@@ -1,0 +1,64 @@
+"""Figs 2/4 — load-capacity profiling: per-op-class latency inflation under
+concurrent streaming, measured on this machine, + GBT latency-model fit
+quality (the XGBoost-replacement validation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.latency_model import (fit_latency_model, profile_ops)
+
+D = 512
+S = 256
+
+
+def _suite():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (S, D), jnp.float32)
+    w = jax.random.normal(key, (D, 4 * D), jnp.float32)
+    w2 = jax.random.normal(key, (D, D), jnp.float32)
+
+    def blocked(f):
+        jf = jax.jit(f)
+        return lambda: jf().block_until_ready()
+
+    mm = blocked(lambda: x @ w)
+    mm2 = blocked(lambda: x @ w2)
+    add = blocked(lambda: x + x)
+    act = blocked(lambda: jax.nn.gelu(x))
+    sm = blocked(lambda: jax.nn.softmax(x @ x.T))
+    ln = blocked(lambda: (x - x.mean(-1, keepdims=True))
+                 / (x.std(-1, keepdims=True) + 1e-5))
+
+    fl_mm = 2 * S * D * 4 * D
+    fl_mm2 = 2 * S * D * D
+    ab = x.nbytes
+    return {
+        "matmul_big": ("reusable", fl_mm, ab + w.nbytes, lambda: mm()),
+        "matmul_sq": ("reusable", fl_mm2, ab + w2.nbytes, lambda: mm2()),
+        "add": ("elemental", S * D, 2 * ab, lambda: add()),
+        "gelu": ("elemental", 8 * S * D, 2 * ab, lambda: act()),
+        "softmax": ("hierarchical", 2 * S * S * D, ab, lambda: sm()),
+        "layernorm": ("hierarchical", 6 * S * D, 2 * ab, lambda: ln()),
+    }
+
+
+def run():
+    rows = []
+    prof = profile_ops(_suite(), ratios=(0.0, 1.0, 4.0, 16.0), reps=3)
+    by_op = {}
+    for m in prof["meta"]:
+        by_op.setdefault(m["op"], []).append(m)
+    for op, ms in by_op.items():
+        base = ms[0]["latency_s"]
+        worst = max(m["slowdown"] for m in ms)
+        detail = " ".join(f"r{m['ratio']:g}={m['slowdown']:.2f}x" for m in ms)
+        rows.append(Row(f"load_capacity/{op}", base * 1e6,
+                        f"class={ms[0]['class']} {detail}"))
+    model = fit_latency_model(prof, n_trees=60, depth=3)
+    r2 = model.r2(prof["x"], prof["y"])
+    rows.append(Row("load_capacity/gbt_fit", 0.0, f"r2={r2:.3f} "
+                    f"n={len(prof['y'])} (xgboost stand-in)"))
+    return rows

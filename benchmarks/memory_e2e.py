@@ -1,0 +1,51 @@
+"""Table 8 — average/peak memory: FlashMem vs preload (measured residency
+on CPU executors + simulated paper-scale)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_MODELS, MOBILE_HW, PAPER_MODELS, Row
+from repro.core import (HostModel, OPGProblem, OverlapPlan, PreloadExecutor,
+                        StreamingExecutor, build_lm_graph, capacities,
+                        plan_preload_all, simulate, solve)
+from repro.core.capacity import HWSpec
+
+SEQ = 128
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    hw = HWSpec.cpu_calibrated()
+    for name, cfg in BENCH_MODELS.items():
+        g = build_lm_graph(cfg, seq=SEQ, batch=1, dtype_bytes=4)
+        chunk = 1 << 20
+        prob = OPGProblem(g, chunk, m_peak=48 << 20,
+                          capacity=capacities(g, chunk, hw))
+        plan = OverlapPlan.from_solution(prob, solve(prob))
+        model = HostModel.build(cfg, seq=SEQ, batch=1)
+        toks = rng.integers(0, cfg.vocab, (1, SEQ), dtype=np.int32)
+        PreloadExecutor(model).run(toks)
+        st = StreamingExecutor(model, plan).run(toks)
+        pe = PreloadExecutor(model).run(toks)
+        rows.append(Row(f"memory/{name}",
+                        st.exec_s * 1e6,
+                        f"stream avg={st.avg_bytes/1e6:.1f}MB "
+                        f"peak={st.peak_bytes/1e6:.1f}MB; preload "
+                        f"avg={pe.avg_bytes/1e6:.1f}MB; "
+                        f"red={pe.avg_bytes/max(st.avg_bytes,1):.1f}x"))
+    for name, cfg in PAPER_MODELS.items():
+        g = build_lm_graph(cfg, seq=1024, batch=1, dtype_bytes=2)
+        chunk = 4 << 20
+        prob = OPGProblem(g, chunk, m_peak=500 << 20,
+                          capacity=capacities(g, chunk, MOBILE_HW))
+        plan = OverlapPlan.from_solution(prob, solve(prob))
+        ours = simulate(plan, g, MOBILE_HW)
+        pre = simulate(plan_preload_all(g, chunk), g, MOBILE_HW)
+        rows.append(Row(f"memory/sim:{name}",
+                        ours.exec_s * 1e6,
+                        f"stream avg={ours.avg_bytes/1e6:.0f}MB "
+                        f"peak={ours.peak_bytes/1e6:.0f}MB; preload "
+                        f"avg={pre.avg_bytes/1e6:.0f}MB; "
+                        f"red={pre.avg_bytes/max(ours.avg_bytes,1):.1f}x"))
+    return rows

@@ -1,0 +1,38 @@
+"""§Roofline — per (arch x shape x mesh) roofline terms from the dry-run
+artifacts (dryrun_results.json), as benchmark rows. Single-pod (16x16) only
+per the assignment; multi-pod cells prove sharding and are summarized."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(RESULTS):
+        return [Row("roofline/missing", 0.0,
+                    "run: python -m repro.launch.dryrun first")]
+    with open(RESULTS) as f:
+        recs = [r for r in json.load(f) if r.get("ok")]
+    for tag, label in (("", "baseline"), ("final", "optimized")):
+        single = [r for r in recs
+                  if r["mesh"] == "16x16" and r.get("tag", "") == tag]
+        for r in sorted(single, key=lambda x: (x["arch"], x["shape"])):
+            ro = r["roofline"]
+            bound = ro["step_time_bound_s"]
+            rows.append(Row(
+                f"roofline[{label}]/{r['arch']}/{r['shape']}", bound * 1e6,
+                f"compute={ro['compute_s']:.3g}s memory={ro['memory_s']:.3g}s "
+                f"collective={ro['collective_s']:.3g}s "
+                f"bottleneck={ro['bottleneck'].replace('_s','')} "
+                f"useful={ro['useful_flops_ratio']:.2f} "
+                f"mfu_bound={ro['mfu_bound']:.4f}"))
+        multi = [r for r in recs
+                 if r["mesh"] == "2x16x16" and r.get("tag", "") == tag]
+        rows.append(Row(f"roofline[{label}]/multi_pod_cells", 0.0,
+                        f"{len(multi)} cells lowered+compiled on (2,16,16)"))
+    return rows

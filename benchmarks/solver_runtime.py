@@ -1,0 +1,42 @@
+"""Table 4 — LC-OPG solver runtime breakdown per model graph
+(process nodes / build / solve / status), including the paper-scale graphs
+and the assigned-architecture graphs."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import MOBILE_HW, PAPER_MODELS, Row
+from repro.configs import get_arch
+from repro.core import OPGProblem, build_lm_graph, capacities, solve
+from repro.core.capacity import HWSpec
+
+ARCH_GRAPHS = ["yi-6b", "mixtral-8x22b", "jamba-v0.1-52b", "mamba2-130m"]
+TPU_HW = HWSpec()  # datacenter constants for the assigned archs
+
+
+def _bench_one(name, cfg, hw, seq, dtype_bytes, m_peak):
+    t0 = time.perf_counter()
+    g = build_lm_graph(cfg, seq=seq, batch=1, dtype_bytes=dtype_bytes)
+    t1 = time.perf_counter()
+    chunk = 4 << 20
+    caps = capacities(g, chunk, hw)
+    prob = OPGProblem(g, chunk, m_peak=m_peak, capacity=caps)
+    t2 = time.perf_counter()
+    sol = solve(prob)
+    t3 = time.perf_counter()
+    return Row(
+        f"solver/{name}", (t3 - t0) * 1e6,
+        f"nodes={len(g.ops)} weights={len(g.weights)} "
+        f"process={t1-t0:.3f}s build={t2-t1:.3f}s solve={t3-t2:.3f}s "
+        f"status={sol.status} preload={len(sol.preload)} "
+        f"fallbacks={'/'.join(sol.fallbacks_used) or 'none'}")
+
+
+def run():
+    rows = []
+    for name, cfg in PAPER_MODELS.items():
+        rows.append(_bench_one(name, cfg, MOBILE_HW, 1024, 2, 500 << 20))
+    for name in ARCH_GRAPHS:
+        cfg = get_arch(name).model
+        rows.append(_bench_one(name, cfg, TPU_HW, 2048, 2, 2 << 30))
+    return rows

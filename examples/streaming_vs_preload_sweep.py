@@ -1,0 +1,45 @@
+"""Memory/latency trade-off sweep (paper Fig 8): vary M_peak and lambda,
+plot integrated latency vs average memory as an ASCII scatter.
+
+    PYTHONPATH=src python examples/streaming_vs_preload_sweep.py
+"""
+import numpy as np
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core import (OPGProblem, OverlapPlan, build_lm_graph, capacities,
+                        plan_preload_all, simulate, solve)
+from repro.core.capacity import HWSpec
+
+
+def main():
+    cfg = GPTNEO_S
+    graph = build_lm_graph(cfg, seq=128, batch=1, dtype_bytes=4)
+    hw = HWSpec.cpu_calibrated()
+    chunk = 1 << 20
+    caps = capacities(graph, chunk, hw)
+
+    rows = []
+    for m_peak_mb in (8, 16, 32, 64, 128, 256):
+        for lam in (0.5, 0.9, 0.99):
+            prob = OPGProblem(graph, chunk, m_peak=m_peak_mb << 20,
+                              capacity=caps, lam=lam)
+            sol = solve(prob)
+            plan = OverlapPlan.from_solution(prob, sol)
+            sim = simulate(plan, graph, hw)
+            rows.append((m_peak_mb, lam, sol.status, sim.integrated_s,
+                         sim.avg_bytes / 1e6, sim.peak_bytes / 1e6,
+                         plan.preload_bytes(graph) / 1e6))
+    base = simulate(plan_preload_all(graph, chunk), graph, hw)
+
+    print(f"{'M_peak':>7s} {'lam':>5s} {'status':>10s} {'integr.s':>9s} "
+          f"{'avgMB':>7s} {'peakMB':>7s} {'preloadMB':>10s}")
+    for r in rows:
+        print(f"{r[0]:6d}M {r[1]:5.2f} {r[2]:>10s} {r[3]:9.3f} "
+              f"{r[4]:7.1f} {r[5]:7.1f} {r[6]:10.1f}")
+    print(f"{'ALL':>7s} {'-':>5s} {'preload':>10s} {base.integrated_s:9.3f} "
+          f"{base.avg_bytes/1e6:7.1f} {base.peak_bytes/1e6:7.1f} "
+          f"{graph.total_weight_bytes/1e6:10.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Checkpointing: sharded npz + manifest, async save thread, atomic commit,
+and elastic restore onto a different mesh.
+
+Layout per step:
+    <dir>/step_<n>/shard_<host>.npz     flat {path -> np.ndarray}
+    <dir>/step_<n>/manifest.json        tree structure + dtypes + data state
+    <dir>/step_<n>/COMMITTED            written last (atomic visibility)
+
+Restore re-shards automatically: arrays are saved unsharded per-host slice0
+(single-host container) but the manifest records logical paths, so loading
+onto any MeshEnv just device_puts with the new shardings — the elastic
+scaling path (ft/resilience.py) relies on this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def fix(node):
+        if isinstance(node, dict) and node and all(
+                k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save(ckpt_dir: str, step: int, state: dict, *, host: int = 0,
+         extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Synchronous sharded save with atomic COMMITTED marker."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    # npz can't round-trip ml_dtypes (bf16 reads back as void): store raw
+    # bits as uint16/uint8 and record the logical dtype in the manifest
+    logical = {k: str(a.dtype) for k, a in arrays.items()}
+    stored = {}
+    for k, a in arrays.items():
+        if a.dtype.kind not in "biufc":
+            width = a.dtype.itemsize
+            stored[k] = a.view({1: np.uint8, 2: np.uint16,
+                                4: np.uint32}[width])
+        else:
+            stored[k] = a
+    np.savez(os.path.join(tmp, f"shard_{host}.npz"), **stored)
+    manifest = {
+        "step": step,
+        "paths": {k: {"dtype": logical[k], "shape": list(a.shape)}
+                  for k, a in arrays.items()},
+        "extra": extra or {},
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    _gc(ckpt_dir, keep)
+    return d
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(p for p in os.listdir(ckpt_dir) if p.startswith("step_")
+                   and os.path.exists(os.path.join(ckpt_dir, p, "COMMITTED")))
+    for p in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, p), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(p.split("_")[1]) for p in os.listdir(ckpt_dir)
+             if p.startswith("step_")
+             and os.path.exists(os.path.join(ckpt_dir, p, "COMMITTED"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, *, host: int = 0,
+            shardings=None) -> tuple:
+    """Returns (state_tree, extra). With `shardings` (a pytree of
+    NamedSharding matching the state), arrays are device_put with the NEW
+    mesh's shardings — elastic restore onto any topology."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no committed checkpoint under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes  # noqa: PLC0415 — jax dependency, always present
+    with np.load(os.path.join(d, f"shard_{host}.npz")) as z:
+        flat = {}
+        for k in z.files:
+            a = z[k]
+            want = manifest["paths"].get(k, {}).get("dtype", str(a.dtype))
+            if want != str(a.dtype):
+                a = a.view(np.dtype(getattr(ml_dtypes, want, want)))
+            flat[k] = a
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        flat_out = {}
+        for k, v in flat.items():
+            sh = flat_sh.get(k)
+            flat_out[k] = jax.device_put(v, sh) if sh is not None else v
+        tree = _unflatten(flat_out)
+    return tree, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves on a worker thread; at most one in flight —
+    a newer snapshot supersedes a queued older one."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._pending = None
+        self._lock = threading.Lock()
+        self._kick = threading.Event()
+        self._stop = False
+        self.saved_steps: list = []
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def submit(self, step: int, state, extra: Optional[dict] = None):
+        host_state = jax.tree.map(np.asarray, state)  # snapshot off-device
+        with self._lock:
+            self._pending = (step, host_state, extra)
+        self._kick.set()
+
+    def _worker(self):
+        while True:
+            self._kick.wait()
+            self._kick.clear()
+            if self._stop:
+                return
+            with self._lock:
+                item, self._pending = self._pending, None
+            if item is None:
+                continue
+            step, state, extra = item
+            save(self.dir, step, state, extra=extra, keep=self.keep)
+            self.saved_steps.append(step)
+
+    def wait_idle(self, timeout: float = 60.0):
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            with self._lock:
+                if self._pending is None and not self._kick.is_set():
+                    return
+            time.sleep(0.01)
+
+    def close(self):
+        self.wait_idle()
+        self._stop = True
+        self._kick.set()
+        self._t.join(timeout=5.0)

@@ -1,0 +1,186 @@
+"""Latency-under-load model (paper §4.2, Figs 2/4).
+
+The paper trains an XGBoost regressor on profiled kernels to predict
+execution latency under varying *additional* concurrent data loading, then
+derives per-layer load capacities. XGBoost is not available offline, so
+``GBTRegressor`` is a small histogram gradient-boosted-trees implementation
+in numpy (squared loss, depth-limited greedy splits) — same role, same
+feature set:
+
+  [class onehot(3), log10 flops, log10 act_bytes, extra_ratio, log10 extra_bytes]
+
+``profile_ops`` measures the real phenomenon on this machine: each op kernel
+is timed while a background thread streams (memcpy) extra bytes — the CPU
+analogue of texture-upload contention on the mobile GPU's shared memory bus.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+import numpy as np
+
+CLASSES = ("elemental", "reusable", "hierarchical")
+
+
+# ---------------------------------------------------------------------------
+# histogram GBT (xgboost stand-in)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Node:
+    feature: int = -1
+    thresh: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class GBTRegressor:
+    def __init__(self, n_trees: int = 80, depth: int = 3, lr: float = 0.1,
+                 n_bins: int = 32, min_leaf: int = 4):
+        self.n_trees, self.depth, self.lr = n_trees, depth, lr
+        self.n_bins, self.min_leaf = n_bins, min_leaf
+        self.trees: List[List[_Node]] = []
+        self.base = 0.0
+
+    def _fit_tree(self, x, g):
+        nodes = [_Node(value=float(np.mean(g)))]
+        stack = [(0, np.arange(len(g)), 0)]
+        while stack:
+            idx, rows, d = stack.pop()
+            if d >= self.depth or len(rows) < 2 * self.min_leaf:
+                continue
+            best = (0.0, None)
+            gsum, cnt = g[rows].sum(), len(rows)
+            for f in range(x.shape[1]):
+                vals = x[rows, f]
+                qs = np.quantile(vals, np.linspace(0.05, 0.95, self.n_bins))
+                for t in np.unique(qs):
+                    m = vals <= t
+                    nl = int(m.sum())
+                    if nl < self.min_leaf or cnt - nl < self.min_leaf:
+                        continue
+                    sl = g[rows[m]].sum()
+                    sr = gsum - sl
+                    gain = sl * sl / nl + sr * sr / (cnt - nl) - gsum * gsum / cnt
+                    if gain > best[0]:
+                        best = (gain, (f, t, m))
+            if best[1] is None:
+                continue
+            f, t, m = best[1]
+            li, ri = len(nodes), len(nodes) + 1
+            nodes[idx].feature, nodes[idx].thresh = f, t
+            nodes[idx].left, nodes[idx].right = li, ri
+            nodes.append(_Node(value=float(np.mean(g[rows[m]]))))
+            nodes.append(_Node(value=float(np.mean(g[rows[~m]]))))
+            stack.append((li, rows[m], d + 1))
+            stack.append((ri, rows[~m], d + 1))
+        return nodes
+
+    def _predict_tree(self, nodes, x):
+        out = np.zeros(len(x))
+        for i, row in enumerate(x):
+            n = 0
+            while nodes[n].left != -1:
+                n = nodes[n].left if row[nodes[n].feature] <= nodes[n].thresh \
+                    else nodes[n].right
+            out[i] = nodes[n].value
+        return out
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "GBTRegressor":
+        x = np.asarray(x, float)
+        y = np.asarray(y, float)
+        self.base = float(np.mean(y))
+        pred = np.full(len(y), self.base)
+        self.trees = []
+        for _ in range(self.n_trees):
+            tree = self._fit_tree(x, y - pred)
+            self.trees.append(tree)
+            pred += self.lr * self._predict_tree(tree, x)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.atleast_2d(np.asarray(x, float))
+        out = np.full(len(x), self.base)
+        for tree in self.trees:
+            out += self.lr * self._predict_tree(tree, x)
+        return out
+
+    def r2(self, x, y) -> float:
+        p = self.predict(x)
+        y = np.asarray(y, float)
+        ss = np.sum((y - y.mean()) ** 2)
+        return 1.0 - np.sum((y - p) ** 2) / max(ss, 1e-12)
+
+
+def features(op_class: str, flops: float, act_bytes: float,
+             extra_bytes: float) -> np.ndarray:
+    one = [1.0 if op_class == c else 0.0 for c in CLASSES]
+    ratio = extra_bytes / max(act_bytes, 1.0)
+    return np.array(one + [np.log10(max(flops, 1.0)),
+                           np.log10(max(act_bytes, 1.0)),
+                           ratio,
+                           np.log10(max(extra_bytes, 1.0))])
+
+
+# ---------------------------------------------------------------------------
+# profiling harness — op latency under concurrent streaming
+# ---------------------------------------------------------------------------
+
+class _Streamer(threading.Thread):
+    """Background memcpy of `total_bytes` in 1 MiB slabs."""
+
+    def __init__(self, total_bytes: int):
+        super().__init__(daemon=True)
+        self.total = int(total_bytes)
+        self.src = np.ones(1 << 20, np.uint8)
+        self.dst = np.empty_like(self.src)
+        self.done = threading.Event()
+
+    def run(self):
+        moved = 0
+        while moved < self.total and not self.done.is_set():
+            np.copyto(self.dst, self.src)
+            moved += self.src.nbytes
+
+
+def time_op(fn: Callable[[], None], extra_bytes: int = 0,
+            reps: int = 3) -> float:
+    """Median wall time of fn() while a streamer moves extra_bytes."""
+    ts = []
+    for _ in range(reps):
+        streamer = _Streamer(extra_bytes) if extra_bytes else None
+        if streamer:
+            streamer.start()
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+        if streamer:
+            streamer.done.set()
+            streamer.join(timeout=5.0)
+    return float(np.median(ts))
+
+
+def profile_ops(op_suite: Dict[str, tuple], ratios=(0.0, 0.5, 1.0, 2.0, 4.0),
+                reps: int = 3) -> dict:
+    """op_suite: name -> (op_class, flops, act_bytes, fn). Returns rows of
+    (features, latency_s) plus the per-op baseline latency."""
+    xs, ys, meta = [], [], []
+    for name, (op_class, flops, act_bytes, fn) in op_suite.items():
+        fn()  # warmup / compile
+        base = time_op(fn, 0, reps)
+        for r in ratios:
+            extra = int(r * act_bytes)
+            t = time_op(fn, extra, reps) if extra else base
+            xs.append(features(op_class, flops, act_bytes, extra))
+            ys.append(t)
+            meta.append({"op": name, "class": op_class, "ratio": r,
+                         "latency_s": t, "slowdown": t / max(base, 1e-12)})
+    return {"x": np.array(xs), "y": np.array(ys), "meta": meta}
+
+
+def fit_latency_model(profile: dict, **gbt_kw) -> GBTRegressor:
+    return GBTRegressor(**gbt_kw).fit(profile["x"], profile["y"])

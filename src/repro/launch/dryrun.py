@@ -1,0 +1,127 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first backend init). Everything below may import jax.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.analysis.roofline import roofline_from_lowered   # noqa: E402
+from repro.configs import ASSIGNED, get_arch                 # noqa: E402
+from repro.distributed.sharding import param_bytes           # noqa: E402
+from repro.launch.mesh import make_env                       # noqa: E402
+from repro.models.model import lower_step, make_step_bundle  # noqa: E402
+
+RESULTS = "dryrun_results.json"
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             attn_mode: str = "full", verbose: bool = True,
+             extra_tag: str = "") -> dict:
+    arch = get_arch(arch_name)
+    shapes = {s.name: s for s in arch.shapes}
+    shape = shapes[shape_name]
+    run = arch.run_config(shape.name)
+    env = make_env(multi_pod=multi_pod,
+                   fsdp=run.fsdp and shape.kind == "train",
+                   seq_shard=run.seq_shard, layout=run.layout)
+    bundle = make_step_bundle(arch, shape, env, attn_mode=attn_mode)
+
+    t0 = time.time()
+    lowered = lower_step(bundle, env)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    roof = roofline_from_lowered(lowered, compiled, env.mesh, arch, shape)
+
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": extra_tag,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "param_bytes_global": param_bytes(bundle.arg_specs[0]),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "roofline": roof,
+        "ok": True,
+    }
+    if verbose:
+        print(f"== {arch_name} x {shape_name} @ {rec['mesh']} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        print("memory_analysis:", mem)
+        print("cost_analysis flops:", cost.get("flops"),
+              "bytes:", cost.get("bytes accessed"))
+        print("roofline:", json.dumps(roof, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--attn-mode", default="full")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+            for r in results if r.get("ok")}
+
+    for name in archs:
+        arch = get_arch(name)
+        supported = [s.name for s in arch.supported_shapes()]
+        shape_names = supported if args.shape == "all" else \
+            [s for s in [args.shape] if s in supported]
+        for skipped in arch.skipped_shapes():
+            print(f"-- skip {name} x {skipped.name}: full-attention arch, "
+                  f"sub-quadratic shape (see DESIGN.md §6)")
+        for sn in shape_names:
+            for mp in meshes:
+                key = (name, sn, "2x16x16" if mp else "16x16", args.tag)
+                if key in done:
+                    print(f"-- cached {key}")
+                    continue
+                try:
+                    rec = run_cell(name, sn, multi_pod=mp,
+                                   attn_mode=args.attn_mode,
+                                   extra_tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": name, "shape": sn,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "tag": args.tag, "ok": False, "error": repr(e)}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

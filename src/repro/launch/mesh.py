@@ -1,0 +1,30 @@
+"""Production meshes. Functions only — importing this module never touches
+jax device state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import MeshEnv, make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_env(*, multi_pod: bool = False, fsdp: bool = False,
+             seq_shard: bool = True, layout: str = "tp", mesh=None) -> MeshEnv:
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(multi_pod="pod" in mesh.axis_names, fsdp=fsdp,
+                       seq_shard=seq_shard, layout=layout)
+    return MeshEnv(mesh=mesh, rules=rules)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1) -> MeshEnv:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    devs = np.array(jax.devices()[: n_data * n_model]).reshape(n_data, n_model)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    return MeshEnv(mesh=mesh, rules=make_rules())

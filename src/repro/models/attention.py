@@ -1,0 +1,356 @@
+"""Attention: GQA with RoPE/M-RoPE, sliding windows, blocked (flash-style)
+prefill/train path and a flash-decoding-style decode path with the KV cache
+sharded over the model axis on the sequence dim.
+
+The blocked path is the pure-JAX analogue of kernels/flash_attention.py; on
+TPU the Pallas kernel replaces it for the hot shapes (see kernels/ops.py).
+
+Three scheduling modes for the block grid (see EXPERIMENTS.md §Perf):
+  * "full"   — every (q, kv) block pair computed, invalid pairs masked.
+               Paper-faithful baseline; wastes ~2x FLOPs under causal masks
+               and ~S/W under sliding windows.
+  * "banded" — static kv band per q block; exact FLOPs for sliding windows.
+  * "paired" — causal triangle folded in half: q block rows (i, n-1-i) share
+               one constant-width band of n+1 kv visits, removing the causal
+               2x waste with fully static shapes (hillclimb optimization).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshEnv, ParamSpec
+from repro.models.layers import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, prefix_layers: tuple = ()) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    lyr = tuple("layers" for _ in prefix_layers)
+    dt = jnp.bfloat16
+    out = {
+        "wq": ParamSpec((*prefix_layers, d, nq * hd), dt, lyr + ("fsdp_row", "heads")),
+        "wk": ParamSpec((*prefix_layers, d, nkv * hd), dt, lyr + ("fsdp_row", "heads")),
+        "wv": ParamSpec((*prefix_layers, d, nkv * hd), dt, lyr + ("fsdp_row", "heads")),
+        "wo": ParamSpec((*prefix_layers, nq * hd, d), dt, lyr + ("heads", "fsdp_row")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamSpec((*prefix_layers, nq * hd), jnp.float32, lyr + ("heads",), init="zeros")
+        out["bk"] = ParamSpec((*prefix_layers, nkv * hd), jnp.float32, lyr + ("heads",), init="zeros")
+        out["bv"] = ParamSpec((*prefix_layers, nkv * hd), jnp.float32, lyr + ("heads",), init="zeros")
+    return out
+
+
+def _project(p: dict, name: str, x: jax.Array, heads: int, hd: int,
+             bias: Optional[str] = None) -> jax.Array:
+    y = jnp.einsum("bsd,dh->bsh", x, p[name])
+    if bias is not None and bias in p:
+        y = y + p[bias].astype(y.dtype)
+    b, s, _ = y.shape
+    return y.reshape(b, s, heads, hd)
+
+
+def _rope(cfg: ModelConfig, x: jax.Array, positions) -> jax.Array:
+    if cfg.rope == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta)
+    return x
+
+
+def qkv_project(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+                env: MeshEnv):
+    """Project + rope. x: [B,S,D] -> q [B,S,nq,hd], k/v [B,S,nkv,hd]."""
+    hd = cfg.resolved_head_dim
+    q = _rope(cfg, _project(p, "wq", x, cfg.n_heads, hd, "bq"), positions)
+    k = _rope(cfg, _project(p, "wk", x, cfg.n_kv_heads, hd, "bk"), positions)
+    v = _project(p, "wv", x, cfg.n_kv_heads, hd, "bv")
+    q = env.constrain(q, "batch", None, "heads", None)
+    k = env.constrain(k, "batch", None, "kv_heads", None)
+    v = env.constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+def _block_sizes(s: int, want: int) -> int:
+    b = min(want, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      block_q: int = 1024, block_kv: int = 1024,
+                      mode: str = "full", q_offset=0) -> jax.Array:
+    """q: [B,Sq,Hq,hd], k/v: [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd].
+
+    ``q_offset`` (may be a traced scalar — context-parallel prefill passes
+    axis_index * S_local) shifts the causal/window masks when q is a chunk
+    of a longer sequence whose kv covers the full range."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    bq = _block_sizes(sq, block_q)
+    bkv = _block_sizes(sk, block_kv)
+    nq, nk = sq // bq, sk // bkv
+
+    offset_static = isinstance(q_offset, int)
+    if mode == "paired" and not (causal and not window and sq == sk
+                                 and bq == bkv and nq % 2 == 0 and nq >= 2
+                                 and offset_static and q_offset == 0):
+        mode = "full"
+    if mode == "banded" and not (window and offset_static and q_offset == 0):
+        mode = "full"
+
+    # GQA via KV repeat to the full head count: einsums then contract on the
+    # (model-sharded) head dim uniformly. Splitting heads into [hkv, g]
+    # instead makes GSPMD reshard every kv step (observed: ~1k all-to-alls
+    # inside the block loops when hkv doesn't divide the model axis).
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = jnp.moveaxis(q.astype(jnp.float32).reshape(b, nq, bq, hq, hd),
+                      1, 0)                                  # [nq,b,bq,hq,hd]
+    kf = k.astype(jnp.float32).reshape(b, nk, bkv, hq, hd)
+    vf = v.astype(jnp.float32).reshape(b, nk, bkv, hq, hd)
+
+    # static relative-offset table: the (qi, jj) mask only depends on the
+    # scalar rel = qi*bq - jj*bkv, so comparing `delta` against scalars keeps
+    # XLA from hoisting per-iteration [bq,bkv] masks out of the scan (which
+    # materializes O(nq*nk) pred tensors — observed 0.5 GB/chip before).
+    delta = (jnp.arange(bq)[:, None] - jnp.arange(bkv)[None, :]).astype(jnp.int32)
+
+    def kv_step(state, qblk, qi, jj):
+        """One online-softmax update of `state` against kv block jj."""
+        m, l, acc = state
+        kb = jax.lax.dynamic_index_in_dim(kf, jj, axis=1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vf, jj, axis=1, keepdims=False)
+        s = jnp.einsum("bqhd,bphd->bhqp", qblk, kb) * scale
+        rel = jnp.asarray(qi * bq + q_offset - jj * bkv, jnp.int32)
+        mask = jnp.ones((bq, bkv), bool)
+        if causal:
+            mask &= delta >= -rel
+        if window:
+            mask &= delta < (window - rel)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqp,bphd->bhqd", p, vb)
+        return (m_new, l_new, acc_new)
+
+    def init_state():
+        return (jnp.full((b, hq, bq), NEG_INF, jnp.float32),
+                jnp.zeros((b, hq, bq), jnp.float32),
+                jnp.zeros((b, hq, bq, hd), jnp.float32))
+
+    def finish(state):
+        m, l, acc = state
+        out = acc / jnp.maximum(l[..., None], 1e-30)         # [b,hq,bq,hd]
+        return jnp.transpose(out, (0, 2, 1, 3))              # [b,bq,hq,hd]
+
+    if mode == "paired":
+        # fold row i with row nq-1-i: combined kv visits (i+1)+(nq-i) = nq+1
+        half = nq // 2
+
+        def pair_fn(args):
+            pi, q_lo, q_hi = args                            # block indices
+            st_lo, st_hi = init_state(), init_state()
+
+            def step(carry, j):
+                st_lo, st_hi = carry
+                use_lo = j <= pi
+                jj = jnp.where(use_lo, j, j - (pi + 1)).astype(jnp.int32)
+                qi = jnp.where(use_lo, pi, nq - 1 - pi).astype(jnp.int32)
+                qblk = jnp.where(use_lo, q_lo, q_hi)
+                # select the active state, update it ONCE, route result back
+                sel = jax.tree.map(lambda a, c: jnp.where(use_lo, a, c),
+                                   st_lo, st_hi)
+                nxt = kv_step(sel, qblk, qi, jj)
+                new_lo = jax.tree.map(
+                    lambda cur, n: jnp.where(use_lo, n, cur), st_lo, nxt)
+                new_hi = jax.tree.map(
+                    lambda cur, n: jnp.where(use_lo, cur, n), st_hi, nxt)
+                return (new_lo, new_hi), None
+
+            (st_lo, st_hi), _ = jax.lax.scan(step, (st_lo, st_hi),
+                                             jnp.arange(nq + 1, dtype=jnp.int32))
+            return finish(st_lo), finish(st_hi)
+
+        pis = jnp.arange(half, dtype=jnp.int32)
+        lo_blocks = qf[:half]
+        hi_blocks = qf[nq - 1 - pis]
+        outs_lo, outs_hi = jax.lax.map(pair_fn, (pis, lo_blocks, hi_blocks))
+        outs = jnp.concatenate([outs_lo, outs_hi[::-1]], axis=0)
+    elif mode == "banded":
+        band = min(nk, (window + bq - 1) // bkv + 2)
+
+        def row_fn(args):
+            qi, qblk = args
+            lo = jnp.maximum((qi * bq - window + 1) // bkv, 0).astype(jnp.int32)
+            hi = jnp.minimum(((qi + 1) * bq - 1) // bkv, nk - 1) if causal \
+                else jnp.int32(nk - 1)
+
+            def step(st, t):
+                off = t
+                jj = jnp.clip(lo + off, 0, nk - 1)
+                ok = (lo + off <= hi)
+                nxt = kv_step(st, qblk, qi, jj)
+                st = jax.tree.map(lambda c, n: jnp.where(ok, n, c), st, nxt)
+                return st, None
+
+            st, _ = jax.lax.scan(step, init_state(),
+                                 jnp.arange(band, dtype=jnp.int32))
+            return finish(st)
+
+        outs = jax.lax.map(row_fn, (jnp.arange(nq, dtype=jnp.int32), qf))
+    else:  # full
+        def row_fn(args):
+            qi, qblk = args
+
+            def step(st, jj):
+                return kv_step(st, qblk, qi, jj), None
+
+            st, _ = jax.lax.scan(step, init_state(),
+                                 jnp.arange(nk, dtype=jnp.int32))
+            return finish(st)
+
+        outs = jax.lax.map(row_fn, (jnp.arange(nq, dtype=jnp.int32), qf))
+
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal=True, window=0):
+    """Reference unblocked attention (small shapes / oracles)."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqkgd,bpkd->bkgqp", qf, k.astype(jnp.float32)) * scale
+    qp, kp = jnp.arange(sq), jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqp,bpkd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path — KV cache sharded over the model axis on the sequence dim
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                prefix_layers: tuple = ()) -> dict:
+    hd = cfg.resolved_head_dim
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    lyr = tuple("layers" for _ in prefix_layers)
+    shape = (*prefix_layers, batch, cache_len, cfg.n_kv_heads, hd)
+    logical = lyr + ("batch", "kv_seq", None, None)
+    return {
+        "k": ParamSpec(shape, jnp.bfloat16, logical, init="zeros"),
+        "v": ParamSpec(shape, jnp.bfloat16, logical, init="zeros"),
+    }
+
+
+def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, env: MeshEnv):
+    """One-token decode. x: [B,1,D]; cache k/v: [B,C,nkv,hd]; pos: [B]
+    (or [3,B] for mrope). Returns (attn_out [B,1,D], new_cache).
+
+    The cache seq dim is sharded over the model axis (flash-decoding): each
+    shard computes partial softmax stats; XLA inserts the all-reduce for the
+    global max / normalizer.
+    """
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    g = nq // nkv
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+
+    if cfg.rope == "mrope":
+        rope_pos = pos[..., None]        # [3,B,1]
+        scalar_pos = pos[0]
+    else:
+        rope_pos = pos[:, None]          # [B,1]
+        scalar_pos = pos
+
+    q = _rope(cfg, _project(p, "wq", x, nq, hd, "bq"), rope_pos)
+    k_new = _rope(cfg, _project(p, "wk", x, nkv, hd, "bk"), rope_pos)
+    v_new = _project(p, "wv", x, nkv, hd, "bv")
+
+    # ring-buffer slot under sliding window, else absolute (clamped) position
+    slot = scalar_pos % cache_len if cfg.sliding_window else jnp.minimum(
+        scalar_pos, cache_len - 1)
+
+    def write(cache_arr, new):
+        def upd(c, n, s):
+            return jax.lax.dynamic_update_slice(c, n, (s, jnp.int32(0), jnp.int32(0)))
+        return jax.vmap(upd)(cache_arr, new, slot.astype(jnp.int32))
+
+    k_cache = write(cache["k"], k_new.astype(cache["k"].dtype))
+    v_cache = write(cache["v"], v_new.astype(cache["v"].dtype))
+    k_cache = env.constrain(k_cache, "batch", "kv_seq", None, None)
+    v_cache = env.constrain(v_cache, "batch", "kv_seq", None, None)
+
+    # bf16 QK/PV with f32 accumulation: casting the whole cache to f32
+    # doubles the dominant decode HBM traffic (§Perf iteration 9)
+    qf = q.astype(k_cache.dtype).reshape(b, nkv, g, hd)
+    s = jnp.einsum("bkgd,bpkd->bkgp", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / np.sqrt(hd)
+    idx = jnp.arange(cache_len)
+    if cfg.sliding_window:
+        valid = idx[None, :] < jnp.minimum(scalar_pos + 1, cache_len)[:, None]
+    else:
+        valid = idx[None, :] <= scalar_pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pmax = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    out = jnp.einsum("bkgp,bpkd->bkgd", e.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.sum(e, axis=-1)[..., None]
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    attn = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return attn, {"k": k_cache, "v": v_cache}
+
+
+def attention_block(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+                    env: MeshEnv, *, causal=True, window=None,
+                    block_q=1024, block_kv=1024, mode="full",
+                    kv_override=None):
+    """Full-sequence attention (train/prefill). Returns [B,S,D]."""
+    x = env.constrain(x, "batch", None, "embed")
+    q, k, v = qkv_project(cfg, p, x, positions, env)
+    if kv_override is not None:          # cross attention (whisper decoder)
+        k, v = kv_override
+        causal = False
+    w = cfg.sliding_window if window is None else window
+    out = blocked_attention(q, k, v, causal=causal, window=w,
+                            block_q=block_q, block_kv=block_kv, mode=mode)
+    b, s = out.shape[:2]
+    out = out.reshape(b, s, -1)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return env.constrain(out, "batch", "seq", "embed")

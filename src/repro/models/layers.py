@@ -1,0 +1,131 @@
+"""Shared layer primitives: norms, FFN, rotary embeddings (RoPE / M-RoPE)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshEnv, ParamSpec
+
+
+def norm_specs(cfg: ModelConfig, prefix_layers: tuple = ()) -> dict:
+    d = cfg.d_model
+    spec = {"scale": ParamSpec((*prefix_layers, d), jnp.float32,
+                               tuple("layers" for _ in prefix_layers) + ("embed",),
+                               init="ones")}
+    if cfg.norm == "layernorm":
+        spec["bias"] = ParamSpec((*prefix_layers, d), jnp.float32,
+                                 tuple("layers" for _ in prefix_layers) + ("embed",),
+                                 init="zeros")
+    return spec
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y.astype(dtype)
+
+
+def activation(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense MLP; MoE lives in moe.py)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None,
+              prefix_layers: tuple = ()) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    lyr = tuple("layers" for _ in prefix_layers)
+    dt = jnp.bfloat16
+    if cfg.glu:
+        return {
+            "wi": ParamSpec((*prefix_layers, d, f), dt, lyr + ("fsdp_row", "d_ff")),
+            "wg": ParamSpec((*prefix_layers, d, f), dt, lyr + ("fsdp_row", "d_ff")),
+            "wo": ParamSpec((*prefix_layers, f, d), dt, lyr + ("d_ff", "fsdp_row")),
+        }
+    return {
+        "wi": ParamSpec((*prefix_layers, d, f), dt, lyr + ("fsdp_row", "d_ff")),
+        "wo": ParamSpec((*prefix_layers, f, d), dt, lyr + ("d_ff", "fsdp_row")),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array, env: MeshEnv) -> jax.Array:
+    # x: [B, S, D] seq-sharded; gather seq, shard d_ff over model
+    x = env.constrain(x, "batch", None, "embed")
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    h = env.constrain(h, "batch", None, "d_ff")
+    if cfg.glu:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = activation(cfg, g) * h
+    else:
+        h = activation(cfg, h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return env.constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] int32. Half-rotation convention."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: [3, B, S] (temporal, height, width) ids. ``sections`` gives the
+    per-axis share of the hd/2 frequency slots (t/h/w), matching the released
+    mrope_section for head_dim 128.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [3, B, S, hd/2]
+    total = sum(sections)
+    scale = hd // 2 / total
+    idx = jnp.arange(hd // 2)
+    # slot i belongs to axis a if it falls in that axis' scaled section
+    bounds = jnp.array([0] + [int(round(sum(sections[: i + 1]) * scale))
+                              for i in range(3)])
+    axis_of = jnp.searchsorted(bounds[1:], idx, side="right")  # [hd/2] in {0,1,2}
+    angles = jnp.take_along_axis(
+        angles, axis_of[None, None, :].astype(jnp.int32)[None], axis=0)[0]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)

@@ -1,0 +1,165 @@
+"""Model facade: (arch x shape) -> step function + fully-specified input
+ShapeDtypeStructs (sharded) for the multi-pod dry-run, and real-array
+builders for the CPU smoke tests / examples.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.distributed.sharding import MeshEnv, ParamSpec
+from repro.models import encdec, transformer
+from repro.training.optimizer import OptConfig, opt_state_specs
+from repro.training.trainer import make_train_step
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    if cfg.family == "encdec":
+        return encdec.cache_specs(cfg, batch, cache_len)
+    return transformer.cache_specs(cfg, batch, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, train: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = ParamSpec((b, s), jnp.int32, ("batch", None))
+    out = {}
+    if cfg.frontend == "vision_stub":
+        out["embeds"] = ParamSpec((b, s, cfg.d_model), jnp.bfloat16,
+                                  ("batch", None, None))
+        out["positions"] = ParamSpec((3, b, s), jnp.int32, (None, "batch", None))
+    elif cfg.frontend == "audio_stub":
+        out["frames"] = ParamSpec((b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16, ("batch", None, None))
+        out["tokens"] = tok
+    else:
+        out["tokens"] = tok
+    if train:
+        out["targets"] = ParamSpec((b, s), jnp.int32, ("batch", None))
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    pos_shape, pos_logical = ((3, b), (None, "batch")) if cfg.rope == "mrope" \
+        else ((b,), ("batch",))
+    return {
+        "cache": cache_specs(cfg, b, shape.seq_len),
+        "tokens": ParamSpec((b, 1), jnp.int32, ("batch", None)),
+        "pos": ParamSpec(pos_shape, jnp.int32, pos_logical),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepBundle:
+    """Everything the dry-run / drivers need for one (arch x shape) cell."""
+    fn: Callable                 # jit-able step function
+    arg_specs: tuple             # ParamSpec trees, in call order
+    donate: tuple = ()           # positional indices to donate
+    static_kw: dict = None
+
+
+def _moe_mode(cfg: ModelConfig, smoke: bool) -> str:
+    return "gather"
+
+
+def make_step_bundle(arch: ArchConfig, shape: ShapeConfig, env: MeshEnv, *,
+                     opt_cfg: Optional[OptConfig] = None,
+                     attn_mode: str = "paired",
+                     block_q: int = 1024, block_kv: int = 1024) -> StepBundle:
+    # "paired" folds the causal block triangle in half (models/attention.py)
+    # — exact FLOP halving vs masked-full; automatically falls back to
+    # "full"/"banded" where its preconditions don't hold (§Perf iteration 6).
+    cfg = arch.model
+    run = arch.run_config(shape.name)
+    opt_cfg = opt_cfg or OptConfig(moment_dtype=run.opt_moment_dtype)
+    pspecs = param_specs(cfg)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, run, env, opt_cfg)
+        return StepBundle(
+            fn=step,
+            arg_specs=(pspecs, opt_state_specs(pspecs, opt_cfg),
+                       batch_specs(cfg, shape, train=True)),
+            donate=(0, 1))
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            def fn(params, batch):
+                return encdec.prefill(cfg, run, env, params, batch)
+        elif (attn_mode == "cp" and cfg.family == "dense"
+              and cfg.rope != "mrope" and "model" in env.mesh.axis_names):
+            from repro.models.context_parallel import cp_prefill
+
+            def fn(params, batch):
+                return cp_prefill(cfg, run, env, params, batch["tokens"],
+                                  block_q=block_q, block_kv=block_kv)
+        else:
+            def fn(params, batch):
+                return transformer.prefill(
+                    cfg, run, env, params, batch.get("tokens"),
+                    embeds=batch.get("embeds"),
+                    positions=batch.get("positions"),
+                    attn_mode=attn_mode, block_q=block_q, block_kv=block_kv)
+        return StepBundle(fn=fn,
+                          arg_specs=(pspecs, batch_specs(cfg, shape, train=False)))
+
+    # decode
+    if cfg.family == "encdec":
+        def fn(params, cache, tokens, pos):
+            return encdec.decode_step(cfg, run, env, params, cache, tokens, pos)
+    else:
+        def fn(params, cache, tokens, pos):
+            return transformer.decode_step(cfg, run, env, params, cache,
+                                           tokens, pos)
+    dspecs = decode_input_specs(cfg, shape)
+    return StepBundle(
+        fn=fn,
+        arg_specs=(pspecs, dspecs["cache"], dspecs["tokens"], dspecs["pos"]),
+        donate=(1,))
+
+
+def lower_step(bundle: StepBundle, env: MeshEnv):
+    """jit + lower against sharded ShapeDtypeStructs (no allocation)."""
+    structs = tuple(shd.shape_structs(s, env) for s in bundle.arg_specs)
+    fn = jax.jit(bundle.fn, donate_argnums=bundle.donate)
+    with env.mesh:
+        return fn.lower(*structs)
+
+
+# ---------------------------------------------------------------------------
+# real-array materialization (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def init_inputs(bundle: StepBundle, key) -> tuple:
+    """Materialize random/zero arrays matching the bundle's arg specs."""
+    out = []
+    for tree in bundle.arg_specs:
+        key, sub = jax.random.split(key)
+        def mk(s: ParamSpec, k=sub):
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                hi = 2
+                return jax.random.randint(k, s.shape, 0, hi, s.dtype)
+            return shd.init_params(s, k)
+        out.append(jax.tree.map(mk, tree, is_leaf=shd.is_spec))
+    return tuple(out)

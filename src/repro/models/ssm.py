@@ -1,0 +1,191 @@
+"""State-space mixer: Mamba-2 SSD (state-space duality), chunked matmul form.
+
+TPU adaptation note (DESIGN.md §2/§6): Jamba ships Mamba-1, whose per-channel
+diagonal selective scan is a bandwidth-bound GPU-kernel-shaped algorithm with
+no matmul structure. We implement the hybrid interleave with the SSD mixer
+(scalar per-head decay) because SSD expresses the same selective-state-space
+dynamics as chunked matmuls — the MXU-native formulation. A sequential
+reference recurrence lives in kernels/ref.py and validates this module.
+
+Layout (mamba2): in_proj -> [z, x, B, C, dt]; causal depthwise conv over
+(x,B,C); SSD over heads H = d_inner/head_dim; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshEnv, ParamSpec
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig, prefix_layers: tuple = ()) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    lyr = tuple("layers" for _ in prefix_layers)
+    dt = jnp.bfloat16
+    return {
+        "in_proj": ParamSpec((*prefix_layers, d, 2 * d_inner + 2 * s.d_state + nheads),
+                             dt, lyr + ("fsdp_row", "d_ff")),
+        "conv_w": ParamSpec((*prefix_layers, s.d_conv, conv_dim), jnp.float32,
+                            lyr + ("conv", "d_ff"), scale=0.5),
+        "conv_b": ParamSpec((*prefix_layers, conv_dim), jnp.float32,
+                            lyr + ("d_ff",), init="zeros"),
+        "a_log": ParamSpec((*prefix_layers, nheads), jnp.float32,
+                           lyr + ("d_ff",), init="ssm_a"),
+        "d_skip": ParamSpec((*prefix_layers, nheads), jnp.float32,
+                            lyr + ("d_ff",), init="ones"),
+        "dt_bias": ParamSpec((*prefix_layers, nheads), jnp.float32,
+                             lyr + ("d_ff",), init="zeros"),
+        "norm_scale": ParamSpec((*prefix_layers, d_inner), jnp.float32,
+                                lyr + ("d_ff",), init="ones"),
+        "out_proj": ParamSpec((*prefix_layers, d_inner, d), dt,
+                              lyr + ("d_ff", "fsdp_row")),
+    }
+
+
+def ssm_state_specs(cfg: ModelConfig, batch: int, prefix_layers: tuple = ()) -> dict:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    lyr = tuple("layers" for _ in prefix_layers)
+    return {
+        "ssd": ParamSpec((*prefix_layers, batch, nheads, s.d_state, s.head_dim),
+                         jnp.float32, lyr + ("batch", "d_ff", None, None), init="zeros"),
+        "conv": ParamSpec((*prefix_layers, batch, s.d_conv - 1, conv_dim),
+                          jnp.float32, lyr + ("batch", None, "d_ff"), init="zeros"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    z, xs, bb, cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+                 2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xs, bb, cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array = None):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]. history: [B,K-1,C]."""
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # [B, S+K-1, C]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    out = out + b
+    return jax.nn.silu(out), xp[:, -(k - 1):, :]
+
+
+def ssd_chunked(x, dt, a, bb, cc, d_skip, chunk: int):
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (negative);
+    bb/cc: [B,S,N]. Returns y [B,S,H,P] (f32).
+    """
+    b, s, h, p = x.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    xr = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bb.reshape(b, nc, q, n).astype(jnp.float32)
+    cr = cc.reshape(b, nc, q, n).astype(jnp.float32)
+    alog = dtr * a                                        # [B,nc,Q,H] (<= 0)
+    lcum = jnp.cumsum(alog, axis=2)                       # within-chunk cumsum
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(state, args):
+        xq, dtq, bq, cq, lq, aq = args                    # [B,Q,...]
+        # intra-chunk: y_i = sum_{j<=i} exp(L_i - L_j) (C_i.B_j) dt_j x_j
+        # mask the EXPONENT (not the result): exp() of the masked i<j
+        # entries is a large positive that overflows to inf, and
+        # where(mask, inf, 0) backpropagates 0*inf = nan.
+        ldiff = lq[:, :, None, :] - lq[:, None, :, :]            # [B,Q,Q,H]
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], ldiff, -1e30))
+        g = jnp.einsum("bin,bjn->bij", cq, bq)                   # [B,Q,Q]
+        m = g[..., None] * decay * dtq[:, None, :, :]            # [B,Q,Q,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xq)
+        # inter-chunk: y_i += exp(L_i) C_i . S_prev
+        y_inter = jnp.einsum("bin,bhnp->bihp", cq, state) * \
+            jnp.exp(lq)[..., None]
+        # state update: S = exp(L_Q) S_prev + sum_j exp(L_Q - L_j) dt_j B_j x_j
+        l_last = lq[:, -1:, :]                                   # [B,1,H]
+        w = jnp.exp(l_last - lq) * dtq                           # [B,Q,H]
+        s_new = jnp.einsum("bjh,bjn,bjhp->bhnp", w, bq, xq)
+        state = jnp.exp(l_last[:, 0, :])[:, :, None, None] * state + s_new
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    args = tuple(jnp.moveaxis(v, 1, 0) for v in (xr, dtr, br, cr, lcum, alog))
+    state, ys = jax.lax.scan(chunk_step, state0, args)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, state
+
+
+def _gated_norm(y, z, scale):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def apply_ssm(cfg: ModelConfig, p: dict, x: jax.Array, env: MeshEnv):
+    """Full-sequence SSD mixer. x: [B,S,D] -> [B,S,D]."""
+    s_cfg = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    x = env.constrain(x, "batch", None, "embed")
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc, _ = _causal_conv(jnp.concatenate([xs, bb, cc], axis=-1),
+                          p["conv_w"], p["conv_b"])
+    xs, bb, cc = jnp.split(xbc, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    bsz, seq = x.shape[:2]
+    xh = xs.reshape(bsz, seq, nheads, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, _ = ssd_chunked(xh, dt, a, bb, cc, p["d_skip"], s_cfg.chunk)
+    y = _gated_norm(y.reshape(bsz, seq, d_inner), z, p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["out_proj"])
+    return env.constrain(out, "batch", "seq", "embed")
+
+
+def decode_ssm(cfg: ModelConfig, p: dict, x: jax.Array, state: dict,
+               env: MeshEnv):
+    """Single-token recurrent step. x: [B,1,D]; state: {ssd, conv}."""
+    s_cfg = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xs, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    xbc_in = jnp.concatenate([xs, bb, cc], axis=-1)       # [B,1,conv_dim]
+    xbc, conv_hist = _causal_conv(xbc_in, p["conv_w"], p["conv_b"],
+                                  history=state["conv"])
+    xs, bb, cc = jnp.split(xbc, [d_inner, d_inner + s_cfg.d_state], axis=-1)
+    bsz = x.shape[0]
+    xh = xs.reshape(bsz, nheads, s_cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * (-jnp.exp(p["a_log"])))              # [B,H]
+    bb1, cc1 = bb[:, 0].astype(jnp.float32), cc[:, 0].astype(jnp.float32)
+    # S = a S + dt (B outer x); y = C . S + D x
+    s_new = a[:, :, None, None] * state["ssd"] + \
+        dt[:, :, None, None] * jnp.einsum("bn,bhp->bhnp", bb1, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cc1, s_new) + \
+        xh * p["d_skip"][None, :, None]
+    y = _gated_norm(y.reshape(bsz, 1, d_inner), z, p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"ssd": s_new, "conv": conv_hist.astype(state["conv"].dtype)}

@@ -1,0 +1,280 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+Uniform families (dense, moe, ssm) scan over a stacked block; the hybrid
+family (jamba) has a period-structured layout and is applied unrolled with
+per-layer parameter subtrees. FSDP-stored parameters are re-constrained to
+their compute sharding inside the scan body so GSPMD inserts the per-layer
+all-gather within the loop (ZeRO-3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import MeshEnv, ParamSpec, is_spec
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_specs, norm_specs
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, kind: str, is_moe: bool,
+                 prefix_layers: tuple = ()) -> dict:
+    out = {"norm1": norm_specs(cfg, prefix_layers),
+           "norm2": norm_specs(cfg, prefix_layers)}
+    if kind == "attn":
+        out["attn"] = attn.attn_specs(cfg, prefix_layers)
+    else:
+        out["ssm"] = ssm_mod.ssm_specs(cfg, prefix_layers)
+    if is_moe:
+        out["moe"] = moe_mod.moe_specs(cfg, prefix_layers)
+    else:
+        out["mlp"] = mlp_specs(cfg, prefix_layers=prefix_layers)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs = {
+        "embed": ParamSpec((cfg.vocab, d), jnp.bfloat16, ("vocab", "embed"),
+                           scale=1.0),
+        "final_norm": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab), jnp.bfloat16,
+                                     ("embed", "vocab"))
+    if cfg.rope == "none" and cfg.family in ("dense",):
+        specs["pos_embed"] = ParamSpec((8192, d), jnp.bfloat16, ("pos", "embed"),
+                                       scale=0.02)
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        specs["layers"] = {
+            str(i): _block_specs(cfg, kinds[i], cfg.layer_is_moe(i))
+            for i in range(cfg.num_layers)
+        }
+    else:
+        specs["blocks"] = _block_specs(
+            cfg, kinds[0], cfg.layer_is_moe(0), prefix_layers=(cfg.num_layers,))
+    return specs
+
+
+def strip_layer_axis(specs: dict) -> dict:
+    """Per-layer view of stacked block specs (for in-scan re-sharding)."""
+    def strip(s: ParamSpec):
+        return ParamSpec(s.shape[1:], s.dtype, s.logical[1:], s.init, s.scale)
+    return jax.tree.map(strip, specs, is_leaf=is_spec)
+
+
+def constrain_params(tree, specs, env: MeshEnv):
+    """Per-layer compute view of stored params: fsdp/ZeRO-3 rows gathered."""
+    return jax.tree.map(
+        lambda x, s: env.constrain_compute(x, *s.logical), tree, specs,
+        is_leaf=lambda x: is_spec(x))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, env: MeshEnv, p: dict, x, positions, *,
+                 kind: str, is_moe: bool, mode: str, cache=None, pos=None,
+                 moe_mode: str = "gather", attn_mode: str = "full",
+                 block_q: int = 1024, block_kv: int = 1024):
+    """One decoder block. Returns (x, new_cache, aux)."""
+    aux = {}
+    h = apply_norm(cfg, p["norm1"], x)
+    new_cache = cache
+    if kind == "attn":
+        if mode == "decode":
+            a, new_cache = attn.decode_attention(cfg, p["attn"], h, cache, pos, env)
+        else:
+            a = attn.attention_block(cfg, p["attn"], h, positions, env,
+                                     mode=attn_mode, block_q=block_q,
+                                     block_kv=block_kv)
+    else:
+        if mode == "decode":
+            a, new_cache = ssm_mod.decode_ssm(cfg, p["ssm"], h, cache, env)
+        else:
+            a = ssm_mod.apply_ssm(cfg, p["ssm"], h, env)
+    x = x + a
+    h = apply_norm(cfg, p["norm2"], x)
+    if is_moe:
+        f, aux = moe_mod.apply_moe(cfg, p["moe"], h, env, mode=moe_mode)
+    else:
+        f = apply_mlp(cfg, p["mlp"], h, env)
+    x = x + f
+    return x, new_cache, aux
+
+
+def _moe_aux_zero():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens, env: MeshEnv):
+    x = params["embed"][tokens]          # gather from vocab-sharded table
+    if "pos_embed" in params:
+        s = tokens.shape[1]
+        x = x + params["pos_embed"][:s][None]
+    return env.constrain(x, "batch", "seq", "embed")
+
+
+def logits_fn(cfg: ModelConfig, params, x, env: MeshEnv):
+    x = apply_norm(cfg, params["final_norm"], x)
+    x = env.constrain(x, "batch", None, "embed")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return env.constrain(logits, "batch", None, "vocab")
+
+
+def forward(cfg: ModelConfig, run: RunConfig, env: MeshEnv, params, tokens,
+            *, embeds=None, positions=None, moe_mode="gather",
+            attn_mode="full", block_q=1024, block_kv=1024):
+    """Full-sequence forward -> (logits [B,S,V], aux)."""
+    if embeds is not None:
+        x = env.constrain(embeds, "batch", "seq", "embed")
+        bsz, seq = embeds.shape[:2]
+    else:
+        x = embed_tokens(cfg, params, tokens, env)
+        bsz, seq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (bsz, seq))
+
+    kinds = cfg.layer_kinds()
+    aux_sum = _moe_aux_zero()
+    block_kw = dict(moe_mode=moe_mode, attn_mode=attn_mode,
+                    block_q=block_q, block_kv=block_kv)
+
+    if cfg.family == "hybrid":
+        for i in range(cfg.num_layers):
+            p = params["layers"][str(i)]
+            x, _, aux = _apply_block(cfg, env, p, x, positions, kind=kinds[i],
+                                     is_moe=cfg.layer_is_moe(i), mode="full",
+                                     **block_kw)
+            for k in aux_sum:
+                aux_sum[k] += aux.get(k, 0.0)
+    else:
+        layer_specs = strip_layer_axis(
+            _block_specs(cfg, kinds[0], cfg.layer_is_moe(0), (cfg.num_layers,)))
+        is_moe = cfg.layer_is_moe(0)
+
+        def body(carry, p_layer):
+            xx = carry
+            p_layer = constrain_params(p_layer, layer_specs, env)
+            xx, _, aux = _apply_block(cfg, env, p_layer, xx, positions,
+                                      kind=kinds[0], is_moe=is_moe,
+                                      mode="full", **block_kw)
+            out = {k: aux.get(k, jnp.zeros((), jnp.float32)) for k in aux_sum}
+            return xx, out
+
+        if run.remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if run.remat == "full" else
+                      jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        for k in aux_sum:
+            aux_sum[k] = jnp.sum(auxs[k])
+
+    return logits_fn(cfg, params, x, env), aux_sum
+
+
+def loss_fn(cfg: ModelConfig, run: RunConfig, env: MeshEnv, params, batch,
+            **fw_kw):
+    """Next-token CE loss. batch: tokens/targets [B,S] (targets -1 = pad)."""
+    logits, aux = forward(cfg, run, env, params, batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          positions=batch.get("positions"), **fw_kw)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    tsafe = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, tsafe[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+    metrics = {"loss": loss, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"],
+               "tokens": jnp.sum(mask)}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Decode-state specs. Stacked for uniform families, per-layer for hybrid."""
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        out = {}
+        for i, kind in enumerate(kinds):
+            if kind == "attn":
+                out[str(i)] = attn.cache_specs(cfg, batch, cache_len)
+            else:
+                out[str(i)] = ssm_mod.ssm_state_specs(cfg, batch)
+        return out
+    if kinds[0] == "attn":
+        return attn.cache_specs(cfg, batch, cache_len, (cfg.num_layers,))
+    return ssm_mod.ssm_state_specs(cfg, batch, (cfg.num_layers,))
+
+
+def decode_step(cfg: ModelConfig, run: RunConfig, env: MeshEnv, params, cache,
+                tokens, pos, *, moe_mode="gather"):
+    """One decode step. tokens: [B,1]; pos: [B] ([3,B] for mrope).
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    x = embed_tokens(cfg, params, tokens, env)
+    x = env.constrain(x, "batch", None, "embed")
+    kinds = cfg.layer_kinds()
+    kw = dict(mode="decode", pos=pos, moe_mode=moe_mode)
+
+    if cfg.family == "hybrid":
+        new_cache = {}
+        for i in range(cfg.num_layers):
+            p = params["layers"][str(i)]
+            x, nc, _ = _apply_block(cfg, env, p, x, None, kind=kinds[i],
+                                    is_moe=cfg.layer_is_moe(i),
+                                    cache=cache[str(i)], **kw)
+            new_cache[str(i)] = nc
+    else:
+        layer_specs = strip_layer_axis(
+            _block_specs(cfg, kinds[0], cfg.layer_is_moe(0), (cfg.num_layers,)))
+        is_moe = cfg.layer_is_moe(0)
+
+        def body(carry, xs):
+            xx = carry
+            p_layer, cache_layer = xs
+            p_layer = constrain_params(p_layer, layer_specs, env)
+            xx, nc, _ = _apply_block(cfg, env, p_layer, xx, None,
+                                     kind=kinds[0], is_moe=is_moe,
+                                     cache=cache_layer, **kw)
+            return xx, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    return logits_fn(cfg, params, x, env), new_cache
+
+
+def prefill(cfg: ModelConfig, run: RunConfig, env: MeshEnv, params, tokens,
+            *, embeds=None, positions=None, moe_mode="gather",
+            attn_mode="full", block_q=1024, block_kv=1024):
+    """Prefill forward: returns last-position logits only (serving)."""
+    logits, _ = forward(cfg, run, env, params, tokens, embeds=embeds,
+                        positions=positions, moe_mode=moe_mode,
+                        attn_mode=attn_mode, block_q=block_q, block_kv=block_kv)
+    return logits[:, -1:, :]

@@ -1,0 +1,50 @@
+"""Request batcher: groups same-model FIFO requests into padded batches up
+to `max_batch`/`max_wait_s` — standard serving-front logic, kept separate
+from the engine so the FIFO semantics of the paper's evaluation stay pure
+(batch size 1) unless explicitly enabled.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+
+@dataclass
+class BatcherConfig:
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+    pad_id: int = 0
+
+
+def batch_requests(reqs: List[Request], cfg: BatcherConfig) -> List[Request]:
+    """Coalesce consecutive same-model requests (FIFO order preserved)."""
+    out: List[Request] = []
+    i = 0
+    while i < len(reqs):
+        j = i + 1
+        group = [reqs[i]]
+        while (j < len(reqs) and reqs[j].model == reqs[i].model
+               and len(group) < cfg.max_batch
+               and reqs[j].arrival_s - reqs[i].arrival_s <= cfg.max_wait_s):
+            group.append(reqs[j])
+            j += 1
+        if len(group) == 1:
+            out.append(reqs[i])
+        else:
+            s = max(r.tokens.shape[1] for r in group)
+            toks = np.full((sum(r.tokens.shape[0] for r in group), s),
+                           cfg.pad_id, np.int32)
+            row = 0
+            for r in group:
+                b, sl = r.tokens.shape
+                toks[row: row + b, :sl] = r.tokens
+                row += b
+            out.append(Request(model=group[0].model, tokens=toks,
+                               arrival_s=group[0].arrival_s))
+        i = j
+    return out

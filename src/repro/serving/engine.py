@@ -1,0 +1,108 @@
+"""FIFO multi-model serving engine (paper §2.2 / Fig 6).
+
+Models are registered with their overlap plans; requests queue FIFO; the
+engine runs each request through its model's StreamingExecutor (or
+PreloadExecutor for the baseline mode) and tracks the *global* residency
+timeline across model switches — the paper's multi-DNN memory metric.
+
+Two policies:
+  * "stream"  — FlashMem: each model's weights stream per its plan and are
+    freed at last use, so the switch cost is bounded by M_peak, and model
+    k+1's early chunks can load while model k computes (cross-model
+    pipelining via the shared loader budget).
+  * "preload" — each switch loads the full model then runs (MNN-style);
+    peak = max model size (plus any kept-resident models).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.capacity import HWSpec, capacities
+from repro.core.opg import OPGProblem
+from repro.core.plan import OverlapPlan
+from repro.core.solver import SolverConfig, solve
+from repro.core.streaming import HostModel, PreloadExecutor, StreamingExecutor
+
+
+@dataclass
+class Request:
+    model: str
+    tokens: np.ndarray
+    arrival_s: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Response:
+    model: str
+    latency_s: float
+    init_s: float
+    exec_s: float
+    peak_bytes: int
+
+
+class ServingEngine:
+    def __init__(self, *, policy: str = "stream", chunk_bytes: int = 1 << 20,
+                 m_peak: int = 256 << 20, hw: Optional[HWSpec] = None,
+                 disk_bw: float = 0.0,
+                 solver_cfg: Optional[SolverConfig] = None):
+        assert policy in ("stream", "preload")
+        self.policy = policy
+        self.chunk_bytes = chunk_bytes
+        self.m_peak = m_peak
+        self.hw = hw or HWSpec.cpu_calibrated()
+        self.disk_bw = disk_bw
+        self.solver_cfg = solver_cfg
+        self.models: Dict[str, HostModel] = {}
+        self.plans: Dict[str, OverlapPlan] = {}
+        self.queue: List[Request] = []
+        self.timeline: List[tuple] = []       # (t, resident_bytes, model)
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, model: HostModel):
+        self.models[name] = model
+        if self.policy == "stream":
+            g = model.graph
+            caps = capacities(g, self.chunk_bytes, self.hw)
+            prob = OPGProblem(g, self.chunk_bytes, self.m_peak, caps)
+            sol = solve(prob, self.solver_cfg)
+            self.plans[name] = OverlapPlan.from_solution(prob, sol)
+
+    # -- FIFO --------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run_all(self) -> List[Response]:
+        out = []
+        t_base = time.perf_counter()
+        while self.queue:
+            req = self.queue.pop(0)
+            model = self.models[req.model]
+            t0 = time.perf_counter()
+            if self.policy == "stream":
+                ex = StreamingExecutor(model, self.plans[req.model],
+                                       disk_bw=self.disk_bw)
+                stats = ex.run(req.tokens)
+            else:
+                stats = PreloadExecutor(model, disk_bw=self.disk_bw).run(
+                    req.tokens)
+            dt = time.perf_counter() - t0
+            base_t = t0 - t_base
+            n = max(len(stats.residency), 1)
+            for i, r in enumerate(stats.residency):
+                self.timeline.append((base_t + dt * (i + 1) / n, r,
+                                      req.model))
+            out.append(Response(req.model, dt, stats.init_s, stats.exec_s,
+                                stats.peak_bytes))
+        return out
+
+    # -- metrics -----------------------------------------------------------
+    def peak_memory(self) -> int:
+        return max((r for _, r, _ in self.timeline), default=0)
+
+    def avg_memory(self) -> float:
+        vals = [r for _, r, _ in self.timeline]
+        return float(np.mean(vals)) if vals else 0.0

@@ -1,0 +1,77 @@
+"""Distributed train step: gradient accumulation (lax.scan over microbatches),
+global-norm clip, AdamW, optional int8 gradient compression on the
+data-parallel all-reduce (distributed/compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.sharding import MeshEnv
+from repro.models import encdec, transformer
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def model_loss_fn(cfg: ModelConfig, run: RunConfig, env: MeshEnv) -> Callable:
+    if cfg.family == "encdec":
+        return functools.partial(encdec.loss_fn, cfg, run, env)
+    return functools.partial(transformer.loss_fn, cfg, run, env)
+
+
+def _split_microbatches(batch: dict, k: int) -> dict:
+    def split(x):
+        b = x.shape[0] if x.ndim >= 1 else 0
+        # mrope positions are [3, B, S]
+        if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % k == 0 and b == 3:
+            return jnp.moveaxis(
+                x.reshape(3, k, x.shape[1] // k, *x.shape[2:]), 1, 0)
+        return x.reshape(k, b // k, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, env: MeshEnv,
+                    opt_cfg: OptConfig,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = model_loss_fn(cfg, run, env)
+
+    def forward_backward(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, loss, metrics
+
+    def train_step(params, opt_state, batch):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        micro = run.microbatch or gb
+        k = max(1, gb // micro)
+        if k > 1:
+            mb = _split_microbatches(batch, k)
+            acc_dt = jnp.dtype(run.grad_accum_dtype)
+
+            def body(acc, b_i):
+                grads, loss, metrics = forward_backward(params, b_i)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), acc, grads)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, (losses, metricss) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: (g / k).astype(jnp.float32), grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricss)
+        else:
+            grads, loss, metrics = forward_backward(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, total_loss=loss)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,119 @@
+"""Adaptive fusion (§4.3) + load-capacity model (§4.2) tests."""
+import numpy as np
+import pytest
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.capacity import (HWSpec, THRESHOLDS, analytic_capacity_bytes,
+                                 capacities, model_capacity_bytes)
+from repro.core.fusion import (adaptive_fusion_solve, fuse_graph,
+                               fused_capacities, split_op)
+from repro.core.graph import (ELEMENTAL, HIERARCHICAL, REUSABLE, ModelGraph,
+                              Op, build_lm_graph)
+from repro.core.latency_model import (GBTRegressor, features)
+
+
+def test_op_classification_matches_table5():
+    g = build_lm_graph(GPTNEO_S, seq=32, batch=1)
+    classes = {op.name.split(".")[-1]: op.op_class for op in g.ops}
+    assert classes["wq"] == REUSABLE
+    assert classes["act"] == ELEMENTAL
+    assert classes["res1"] == ELEMENTAL
+    assert classes["norm1"] == HIERARCHICAL
+    assert classes["attn"] == HIERARCHICAL
+
+
+def test_hierarchical_capacity_is_zero():
+    op = Op(0, "ln", "layernorm", flops=1e9, act_bytes=1e6)
+    assert analytic_capacity_bytes(op, HWSpec()) == 0
+
+
+def test_reusable_capacity_grows_with_compute_boundedness():
+    hw = HWSpec()
+    small = Op(0, "m1", "matmul", flops=1e9, act_bytes=1e8)
+    big = Op(1, "m2", "matmul", flops=1e12, act_bytes=1e8)
+    assert analytic_capacity_bytes(big, hw) > analytic_capacity_bytes(small, hw)
+
+
+def test_fusion_reduces_op_count_and_preserves_weights():
+    g = build_lm_graph(GPTNEO_S, seq=32, batch=1)
+    fg = fuse_graph(g)
+    assert len(fg.ops) < len(g.ops)
+    assert set(fg.weights) == set(g.weights)
+    fg.validate()
+
+
+def test_fused_capacity_is_min_rule():
+    g = ModelGraph("t")
+    g.add_op("a", "matmul", flops=1e12, act_bytes=1e6, weight_bytes=1024)
+    g.add_op("b", "add", flops=1e6, act_bytes=1e6)
+    fg = fuse_graph(g)
+    assert len(fg.ops) == 1
+    chunk = 1024
+    c_fused = fused_capacities(fg, chunk)[0]
+    c_parts = capacities(g, chunk)
+    assert c_fused == min(c_parts)
+
+
+def test_split_restores_capacity():
+    g = ModelGraph("t")
+    g.add_op("a", "matmul", flops=1e12, act_bytes=1e6, weight_bytes=1024)
+    g.add_op("b", "add", flops=1e6, act_bytes=1e6)
+    fg = fuse_graph(g)
+    sg = split_op(fg, 0)
+    assert sg is not None and len(sg.ops) == 2
+    c2 = fused_capacities(sg, 1024)
+    assert sum(c2) >= fused_capacities(fg, 1024)[0]
+
+
+def test_hierarchical_fusions_never_split():
+    g = ModelGraph("t")
+    g.add_op("n", "layernorm", flops=1e6, act_bytes=1e6, weight_bytes=512)
+    g.add_op("r", "add", flops=1e5, act_bytes=1e6)
+    fg = fuse_graph(g)
+    if len(fg.ops) == 1:
+        assert split_op(fg, 0) is None
+
+
+def test_adaptive_fusion_reduces_forced_preloads():
+    g = build_lm_graph(GPTNEO_S, seq=128, batch=1, dtype_bytes=4)
+    hw = HWSpec.cpu_calibrated()
+    res = adaptive_fusion_solve(g, chunk_bytes=1 << 20, m_peak=48 << 20, hw=hw)
+    first_forced = res.history[0][1]
+    last_forced = res.history[-1][1]
+    assert last_forced <= first_forced
+    assert res.solution.status in ("OPTIMAL", "FEASIBLE", "HEURISTIC")
+
+
+# -- latency model (GBT) ------------------------------------------------------
+
+def test_gbt_fits_synthetic_latency():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, (400, 8))
+    y = 2.0 * x[:, 3] + 0.5 * x[:, 5] ** 2 + 0.1 * rng.standard_normal(400)
+    m = GBTRegressor(n_trees=60, depth=3).fit(x, y)
+    assert m.r2(x, y) > 0.8
+
+
+def test_gbt_capacity_inversion_monotone():
+    """Train the GBT on an analytic latency law; the inverted capacity must
+    respect class ordering (elemental > reusable > hierarchical=0)."""
+    rows_x, rows_y = [], []
+    rng = np.random.default_rng(1)
+    for _ in range(300):
+        cls = rng.choice(["elemental", "reusable", "hierarchical"])
+        flops = 10 ** rng.uniform(6, 10)
+        ab = 10 ** rng.uniform(4, 8)
+        extra = 10 ** rng.uniform(0, 8)
+        base = max(flops / 1e11, ab / 1e10)
+        slope = {"elemental": 0.1, "reusable": 0.3, "hierarchical": 3.0}[cls]
+        rows_x.append(features(cls, flops, ab, extra))
+        rows_y.append(base + slope * extra / 1e10)
+    m = GBTRegressor(n_trees=80, depth=3).fit(np.array(rows_x),
+                                              np.array(rows_y))
+    hw = HWSpec(peak_flops=1e11, hbm_bw=1e10, stream_bw=5e9)
+    op_e = Op(0, "e", "add", flops=1e8, act_bytes=1e6)
+    op_h = Op(2, "h", "layernorm", flops=1e8, act_bytes=1e6)
+    ce = model_capacity_bytes(op_e, m, hw)
+    ch = model_capacity_bytes(op_h, m, hw)
+    assert ch == 0
+    assert ce > 0

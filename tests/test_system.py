@@ -1,0 +1,141 @@
+"""End-to-end behaviour tests for the full system (deliverable c).
+
+Covers the paper's headline claims at test scale:
+  1. streaming executes identically to preload while bounding memory,
+  2. the LC-OPG plan beats the naive overlap baselines on simulated
+     integrated latency (Fig 9),
+  3. training converges and survives a checkpoint/restart (substrate),
+  4. the distributed step lowers + compiles on a multi-device mesh,
+  5. decode-with-cache matches teacher-forced prefill logits.
+"""
+import tempfile
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.configs.gptneo import GPTNEO_S
+from repro.core import (HostModel, OPGProblem, OverlapPlan, PreloadExecutor,
+                        StreamingExecutor, build_lm_graph, capacities,
+                        plan_always_next, plan_same_op_type, simulate, solve)
+from repro.core.capacity import HWSpec
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+
+TINY = replace(GPTNEO_S, num_layers=4, d_model=256, n_heads=4, n_kv_heads=4,
+               d_ff=1024, vocab=512, name="tiny")
+
+
+def test_flashmem_plan_beats_naive_overlap_in_simulation():
+    """Fig 9: LC-OPG vs Always-Next and Same-Op-Type, simulated on mobile-
+    class constants (load-bound regime, where scheduling matters)."""
+    g = build_lm_graph(GPTNEO_S, seq=256, batch=1, dtype_bytes=4)
+    # mobile-effective constants: ~0.1 TFLOP/s sustained (paper Table 1
+    # latencies imply this on the OnePlus 12), ~1 GB/s flash
+    hw = HWSpec(peak_flops=1e11, hbm_bw=3e10, stream_bw=2e9, disk_bw=1e9)
+    chunk = 1 << 20
+    m_peak = 64 << 20
+    prob = OPGProblem(g, chunk, m_peak=m_peak,
+                      capacity=capacities(g, chunk, hw))
+    sol = solve(prob)
+    plan = OverlapPlan.from_solution(prob, sol)
+    ours = simulate(plan, g, hw)
+    nxt = simulate(plan_always_next(g, chunk), g, hw)
+    sot = simulate(plan_same_op_type(g, chunk), g, hw)
+    assert ours.integrated_s <= nxt.integrated_s * 1.001
+    assert ours.integrated_s <= sot.integrated_s * 1.001
+    # M_peak bounds STREAMED residency; persistent W is excluded (paper
+    # §3.2 "does not include the memory used by the persistent weights")
+    assert ours.peak_bytes <= plan.preload_bytes(g) + m_peak + chunk
+    # and streaming must beat preload-all on average memory
+    assert ours.avg_bytes < 0.9 * g.total_weight_bytes
+
+
+def test_streaming_end_to_end_equivalence_and_memory():
+    g = build_lm_graph(TINY, seq=48, batch=1, dtype_bytes=4)
+    hw = HWSpec.cpu_calibrated()
+    chunk = 128 << 10
+    prob = OPGProblem(g, chunk, m_peak=4 << 20,
+                      capacity=capacities(g, chunk, hw))
+    plan = OverlapPlan.from_solution(prob, solve(prob))
+    model = HostModel.build(TINY, seq=48, batch=1)
+    toks = np.random.default_rng(0).integers(0, TINY.vocab, (1, 48), np.int32)
+    pe = PreloadExecutor(model).run(toks)  # warm + reference
+    st = StreamingExecutor(model, plan).run(toks)
+    np.testing.assert_allclose(np.asarray(st.result), np.asarray(pe.result),
+                               atol=1e-5)
+    assert st.avg_bytes < pe.avg_bytes
+
+
+def test_training_converges_and_resumes():
+    from repro.launch.train import main as train_main
+    with tempfile.TemporaryDirectory() as d:
+        l1 = train_main(["--arch", "yi-6b", "--smoke", "--steps", "12",
+                         "--batch", "8", "--seq", "32", "--ckpt-dir", d,
+                         "--ckpt-every", "6", "--log-every", "100"])
+        l2 = train_main(["--arch", "yi-6b", "--smoke", "--steps", "18",
+                         "--batch", "8", "--seq", "32", "--ckpt-dir", d,
+                         "--resume", "--log-every", "100"])
+        assert len(l2) == 6          # resumed at step 12
+        assert np.mean(l2) < l1[0]   # loss improved vs start
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_distributed_step_lowers_on_multidevice_mesh(kind):
+    """Mini dry-run inside the test suite (1 device here; the 512-way version
+    runs via launch/dryrun.py)."""
+    arch = get_arch("yi-6b")
+    arch = replace(arch, model=arch.model.reduced())
+    env = make_host_mesh()
+    shape = ShapeConfig("s", 32, 4, kind)
+    bundle = M.make_step_bundle(arch, shape, env)
+    lowered = M.lower_step(bundle, env)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+
+
+def test_decode_prefill_consistency():
+    """Greedy decode over a short prompt matches teacher-forced prefill
+    logits (cache correctness across layers)."""
+    from repro.configs.base import RunConfig
+    from repro.distributed import sharding as shd
+    from repro.models import transformer as T
+    cfg = get_arch("yi-6b").model.reduced()
+    env = make_host_mesh()
+    run = RunConfig()
+    params = shd.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits_full, _ = T.forward(cfg, run, env, params, toks)
+    cache = shd.init_params(M.cache_specs(cfg, 2, 16), jax.random.PRNGKey(2))
+    outs = []
+    for t in range(8):
+        lg, cache = T.decode_step(cfg, run, env, params, cache,
+                                  toks[:, t:t + 1],
+                                  jnp.full((2,), t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    # decode computes QK/PV in bf16 with f32 accumulation (§Perf iter 9);
+    # prefill scores are f32 — tolerance covers the bf16 cache rounding
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               atol=6e-2, rtol=6e-2)
+
+
+def test_context_parallel_prefill_matches_sp():
+    """CP prefill (§Perf iteration 7) is numerically identical to the
+    sequence-parallel path (host mesh; sharded compile covered by dryrun)."""
+    from repro.configs.base import RunConfig
+    from repro.distributed import sharding as shd
+    from repro.models import transformer as T
+    from repro.models.context_parallel import cp_prefill
+    cfg = get_arch("yi-6b").model.reduced()
+    env = make_host_mesh()
+    run = RunConfig()
+    params = shd.init_params(M.param_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    ref = T.prefill(cfg, run, env, params, toks)
+    got = cp_prefill(cfg, run, env, params, toks, block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-2)
