@@ -1,0 +1,10 @@
+"""Repo-root conftest: make `repro` importable without exporting
+PYTHONPATH by hand (pyproject.toml's pythonpath covers pytest>=7; this
+covers direct `python -m pytest` invocations from any cwd and older
+pytest)."""
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

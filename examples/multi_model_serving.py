@@ -1,8 +1,12 @@
 """Multi-DNN FIFO serving (the paper's §2.2 scenario / Fig 6).
 
-Four models served in interleaved FIFO order under (a) FlashMem streaming
-and (b) preload-everything, with the global memory timeline printed as an
-ASCII sparkline.
+Four models interleaved under a shared device-memory budget smaller than
+their combined weights, served under (a) FlashMem streaming — per-model
+overlap plans merged by plan_multi_model, weights checked in/out of one
+budgeted WeightCache, the next model prefetched while the current one
+computes — and (b) preload-everything. The global memory timeline is
+printed as an ASCII sparkline along with per-model peaks and pool hit
+rates.
 
     PYTHONPATH=src python examples/multi_model_serving.py
 """
@@ -27,26 +31,40 @@ def spark(vals, width=72):
                             len(BARS) - 1)] for i in idx)
 
 
-def run(policy):
-    engine = ServingEngine(policy=policy, m_peak=64 << 20, disk_bw=0.5e9)
-    rng = np.random.default_rng(0)
-    variants = {
+def variants():
+    """The Fig 6 model mix — also imported by benchmarks/multi_model.py so
+    example and benchmark measure the same workload."""
+    return {
         "encoder": replace(GPTNEO_S, name="encoder", num_layers=6),
         "detector": replace(GPTNEO_S, name="detector", num_layers=8),
         "segmenter": replace(GPTNEO_S, name="segmenter", num_layers=10),
         "translator": replace(GPTNEO_S, name="translator", num_layers=4),
     }
-    for i, (n, cfg) in enumerate(variants.items()):
-        engine.register(n, HostModel.build(cfg, seq=SEQ, seed=i))
+
+
+def budget_for(models):
+    """Shared device budget: well below the models' combined weights."""
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    return int(0.35 * combined)
+
+
+def run(policy, budget_bytes, models):
+    engine = ServingEngine(policy=policy, m_peak=64 << 20, disk_bw=0.5e9,
+                           budget_bytes=budget_bytes)
+    rng = np.random.default_rng(0)
+    for n, m in models.items():
+        engine.register(n, m)
     # warm kernels (compile once, like an app's first launch)
-    for n in variants:
+    for n in engine.models:
         engine.submit(Request(model=n, tokens=rng.integers(
             0, GPTNEO_S.vocab, (1, SEQ), dtype=np.int32)))
     engine.run_all()
     engine.timeline.clear()
+    engine.stats_log.clear()
     # measured FIFO mix: 2 interleaved rounds
     for _ in range(2):
-        for n in variants:
+        for n in engine.models:
             engine.submit(Request(model=n, tokens=rng.integers(
                 0, GPTNEO_S.vocab, (1, SEQ), dtype=np.int32)))
     responses = engine.run_all()
@@ -55,12 +73,24 @@ def run(policy):
 
 
 def main():
+    models = {n: HostModel.build(cfg, seq=SEQ, seed=i)
+              for i, (n, cfg) in enumerate(variants().items())}
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    budget = budget_for(models)
+    print(f"combined weights {combined/1e6:.0f}MB, "
+          f"shared device budget {budget/1e6:.0f}MB")
     for policy in ("preload", "stream"):
-        engine, responses, total = run(policy)
+        engine, responses, total = run(policy, budget, models)
         mem = [r for _, r, _ in engine.timeline]
         print(f"\npolicy={policy}: {len(responses)} requests in {total:.2f}s  "
               f"peak {engine.peak_memory()/1e6:.0f}MB  "
-              f"avg {engine.avg_memory()/1e6:.0f}MB")
+              f"avg {engine.avg_memory()/1e6:.0f}MB  "
+              f"pool hit rate {engine.cache_hit_rate():.2f}")
+        for name, rep in sorted(engine.model_report().items()):
+            print(f"  {name:11s} peak {rep.peak_bytes/1e6:6.1f}MB "
+                  f"avg {rep.avg_bytes/1e6:6.1f}MB "
+                  f"hit rate {rep.cache_hit_rate:.2f}")
         print("memory timeline:", spark([m / 1e6 for m in mem]))
 
 

@@ -7,7 +7,8 @@ from repro.core.capacity import HWSpec, THRESHOLDS, capacities
 from repro.core.fusion import adaptive_fusion_solve, fuse_graph
 from repro.core.graph import ModelGraph, build_lm_graph
 from repro.core.opg import OPGProblem, OPGSolution, check_constraints
-from repro.core.plan import (OverlapPlan, plan_always_next, plan_preload_all,
+from repro.core.plan import (MultiModelPlan, OverlapPlan, plan_always_next,
+                             plan_multi_model, plan_preload_all,
                              plan_same_op_type, simulate)
 from repro.core.solver import SolverConfig, solve, solve_validated
 from repro.core.streaming import HostModel, PreloadExecutor, StreamingExecutor
@@ -15,7 +16,8 @@ from repro.core.streaming import HostModel, PreloadExecutor, StreamingExecutor
 __all__ = [
     "HWSpec", "THRESHOLDS", "capacities", "adaptive_fusion_solve",
     "fuse_graph", "ModelGraph", "build_lm_graph", "OPGProblem", "OPGSolution",
-    "check_constraints", "OverlapPlan", "plan_always_next", "plan_preload_all",
-    "plan_same_op_type", "simulate", "SolverConfig", "solve",
-    "solve_validated", "HostModel", "PreloadExecutor", "StreamingExecutor",
+    "check_constraints", "MultiModelPlan", "OverlapPlan", "plan_always_next",
+    "plan_multi_model", "plan_preload_all", "plan_same_op_type", "simulate",
+    "SolverConfig", "solve", "solve_validated", "HostModel",
+    "PreloadExecutor", "StreamingExecutor",
 ]

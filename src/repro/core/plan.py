@@ -62,22 +62,28 @@ class OverlapPlan:
         return plan
 
     # -- serialization ----------------------------------------------------
-    def to_json(self) -> str:
-        return json.dumps({
+    def to_dict(self) -> dict:
+        return {
             "model": self.model, "chunk_bytes": self.chunk_bytes,
             "preload": list(self.preload),
             "loads": {str(l): [[t.weight, t.chunk_lo, t.chunk_hi] for t in ts]
                       for l, ts in self.loads.items()},
-            "meta": self.meta}, indent=1)
+            "meta": self.meta}
 
     @staticmethod
-    def from_json(s: str) -> "OverlapPlan":
-        d = json.loads(s)
+    def from_dict(d: dict) -> "OverlapPlan":
         plan = OverlapPlan(d["model"], d["chunk_bytes"],
                            tuple(d["preload"]), meta=d.get("meta", {}))
         for l, ts in d["loads"].items():
             plan.loads[int(l)] = [LoadTask(w, lo, hi) for w, lo, hi in ts]
         return plan
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "OverlapPlan":
+        return OverlapPlan.from_dict(json.loads(s))
 
     def streamed_bytes(self) -> int:
         return sum(t.n_chunks for ts in self.loads.values()
@@ -212,3 +218,135 @@ def plan_same_op_type(graph: ModelGraph, chunk_bytes: int) -> OverlapPlan:
 def plan_preload_all(graph: ModelGraph, chunk_bytes: int) -> OverlapPlan:
     return OverlapPlan(graph.name + "+preload", chunk_bytes,
                        preload=tuple(graph.weights))
+
+
+# ---------------------------------------------------------------------------
+# multi-model planning (paper §4.4 — multi-DNN loading schedules)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MultiModelPlan:
+    """Merged per-model OverlapPlans under one global device-memory cap.
+
+    ``peaks`` holds each model's estimated execution peak (preload bytes +
+    the plan's streamed-residency peak) — the planner iterates per-model
+    ``m_peak`` until every peak fits under ``budget_bytes``, so serialized
+    execution of any registered model stays under the cap. The headroom
+    left while model *k* executes, ``prefetch_budget(k)``, is what the
+    serving engine may spend overlapping model *k+1*'s earliest-scheduled
+    chunks — the cross-model analogue of the paper's intra-model overlap.
+    """
+    budget_bytes: int
+    plans: Dict[str, OverlapPlan] = field(default_factory=dict)
+    peaks: Dict[str, int] = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def order(self) -> List[str]:
+        return list(self.plans)
+
+    def global_peak(self) -> int:
+        return max(self.peaks.values(), default=0)
+
+    def fits_budget(self) -> bool:
+        return self.global_peak() <= self.budget_bytes
+
+    def prefetch_budget(self, current: str, reserve: float = 0.0) -> int:
+        """Bytes the engine may spend on the next model while `current`
+        executes, without the pair exceeding the global cap. ``reserve``
+        holds back a fraction of the cap (the engine uses 10%: per-model
+        peaks are plan-time estimates and pinning right up to the budget
+        starves the executor into pool-rejected transients)."""
+        return max(0, int((1.0 - reserve) * self.budget_bytes)
+                   - self.peaks.get(current, 0))
+
+    def prefetch_schedule(self, name: str, weight_bytes: Dict[str, int],
+                          max_bytes: int):
+        """Earliest-scheduled loads of ``name`` fitting ``max_bytes``:
+        (whole preload weights, chunk tasks in plan op order)."""
+        plan = self.plans[name]
+        whole: List[str] = []
+        chunks: List[LoadTask] = []
+        used = 0
+        for w in plan.preload:
+            b = weight_bytes[w]
+            if used + b > max_bytes:
+                continue           # oversized weight: skip, keep filling
+            whole.append(w)
+            used += b
+        for l in sorted(plan.loads):
+            for t in plan.loads[l]:
+                take = min(t.n_chunks,
+                           max(0, (max_bytes - used) // plan.chunk_bytes))
+                if take <= 0:
+                    return whole, chunks
+                chunks.append(LoadTask(t.weight, t.chunk_lo,
+                                       t.chunk_lo + take))
+                used += take * plan.chunk_bytes
+        return whole, chunks
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "budget_bytes": self.budget_bytes,
+            "plans": {n: p.to_dict() for n, p in self.plans.items()},
+            "peaks": dict(self.peaks),
+            "meta": self.meta}, indent=1)
+
+    @staticmethod
+    def from_json(s: str) -> "MultiModelPlan":
+        d = json.loads(s)
+        return MultiModelPlan(
+            budget_bytes=d["budget_bytes"],
+            plans={n: OverlapPlan.from_dict(pd)
+                   for n, pd in d["plans"].items()},
+            peaks={n: int(v) for n, v in d.get("peaks", {}).items()},
+            meta=d.get("meta", {}))
+
+
+def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
+                     budget_bytes: int, hw: Optional[HWSpec] = None,
+                     solver_cfg=None, max_rounds: int = 4) -> MultiModelPlan:
+    """Solve one OverlapPlan per model such that every model's execution
+    peak (preload + streamed residency) fits the shared device budget.
+
+    The per-model ``m_peak`` handed to the LC-OPG solver starts at the full
+    budget and shrinks by the solver's own preload choice each round —
+    preload grows under capacity fallbacks, so the loop re-solves with
+    ``m_peak = budget - preload`` until the combined peak fits (or rounds
+    run out; the achieved peak is recorded either way in ``peaks`` and the
+    per-model ``meta``)."""
+    from repro.core.capacity import capacities
+    from repro.core.opg import OPGProblem, residency_profile
+    from repro.core.solver import solve
+
+    hw = hw or HWSpec()
+    mm = MultiModelPlan(budget_bytes=int(budget_bytes),
+                        meta={"chunk_bytes": chunk_bytes})
+    for name, g in graphs.items():
+        caps = capacities(g, chunk_bytes, hw)
+        m_peak = int(budget_bytes)
+        prev_m_peak = None
+        best = None                       # (peak, plan)
+        for _ in range(max_rounds):
+            if m_peak == prev_m_peak:     # refinement converged
+                break
+            prev_m_peak = m_peak
+            prob = OPGProblem(g, chunk_bytes, m_peak, caps)
+            sol = solve(prob, solver_cfg)
+            plan = OverlapPlan.from_solution(prob, sol)
+            peak = plan.preload_bytes(g) + max(
+                residency_profile(prob, sol), default=0)
+            plan.meta["exec_peak"] = peak
+            if best is None or peak < best[0]:
+                best = (peak, plan)
+            if peak <= budget_bytes:
+                break
+            m_peak = max(chunk_bytes,
+                         int(budget_bytes) - plan.preload_bytes(g))
+        peak, plan = best
+        plan.model = name
+        mm.plans[name] = plan
+        mm.peaks[name] = int(peak)
+    mm.meta["fits_budget"] = mm.fits_budget()
+    return mm

@@ -16,6 +16,14 @@ Executors:
 The optional layout "transformation" applies the 2.5D->MXU tiling pack
 (kernels/ref.layout_pack_ref) on device, mirroring the UM->TM transform the
 paper optimizes; matmuls consume packed weights via the matching unpack.
+
+Both executors can additionally be bound to a shared ``WeightCache``
+(serving/weight_cache.py): chunks and assembled weights are then checked
+in/out of one budgeted device pool, so repeated requests and interleaved
+multi-model workloads hit device-resident weights instead of re-streaming
+them from host/disk. Cache keys are ``(cache_key, weight, chunk_index)``
+for in-flight chunks and ``(cache_key, weight, "w")`` for assembled
+weights; the executor that assembles a weight consumes its chunk entries.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import math
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.graph import ModelGraph, build_lm_graph
 from repro.core.plan import OverlapPlan
+from repro.serving.weight_cache import WeightCache
 
 
 # ---------------------------------------------------------------------------
@@ -197,13 +206,22 @@ class RunStats:
     avg_bytes: float = 0.0
     residency: List[int] = field(default_factory=list)
     stall_events: int = 0
+    model: str = ""
+    cache_hits: int = 0          # weight-pool probes served device-resident
+    cache_misses: int = 0        # probes that had to stream from host/disk
+    result: Any = None
 
     @property
     def integrated_s(self) -> float:
         return self.init_s + self.exec_s
 
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
-def _chunk_rows(arr: np.ndarray, chunk_bytes: int):
+
+def chunk_rows(arr: np.ndarray, chunk_bytes: int):
     """Split along rows into exactly T(w) = ceil(bytes/S) pieces (or fewer if
     the array has fewer rows) so executor chunk indices match the plan's."""
     t = max(1, math.ceil(arr.nbytes / max(chunk_bytes, 1)))
@@ -226,25 +244,63 @@ class _Loader(threading.Thread):
     emulating the storage stage at `disk_bw` (0 = RAM speed), device_puts
     each chunk (JAX async dispatch = the independent DMA queue) and flags
     weights whose chunks have all arrived. With `quantized` host chunks
-    ((int8, scale) tuples) the wire/storage bytes are the int8 payload."""
+    ((int8, scale) tuples) the wire/storage bytes are the int8 payload.
+
+    When bound to a WeightCache, every chunk is probed in the pool first —
+    prefetched or previously-streamed chunks skip the storage stage and the
+    device_put entirely — and freshly-loaded chunks are checked in pinned
+    so LRU pressure cannot drop bytes that are about to be consumed."""
 
     def __init__(self, plan: OverlapPlan, host_chunks: Dict[str, list],
-                 disk_bw: float):
+                 disk_bw: float, cache: Optional[WeightCache] = None,
+                 cache_key: str = ""):
         super().__init__(daemon=True)
         self.plan = plan
         self.host_chunks = host_chunks
         self.disk_bw = disk_bw
+        self.cache = cache
+        self.cache_key = cache_key
         self.arrived: Dict[str, list] = {}
+        self.assembled: Dict[str, jax.Array] = {}   # whole-weight pool hits
+        self.uncached_bytes: Dict[str, int] = {}    # pool-rejected transients
         self.ready: Dict[str, threading.Event] = {
             w: threading.Event() for w in host_chunks}
         self.gate: Dict[int, threading.Event] = {}
         self.bytes_in_flight = 0
+        self.hits = 0                                # loader-thread-local
+        self.misses = 0
         self.lock = threading.Lock()
 
     def allow_through(self, op_index: int):
         ev = self.gate.get(op_index)
         if ev is not None:
             ev.set()
+
+    def _load_chunk(self, w: str, ci: int, chunk):
+        """Pool probe -> storage sleep -> device_put -> pinned check-in."""
+        if isinstance(chunk, tuple):                   # (int8, scale) host
+            nbytes = chunk[0].nbytes
+        else:
+            nbytes = chunk.nbytes
+        if self.cache is not None:
+            cached = self.cache.acquire((self.cache_key, w, ci))
+            if cached is not None:
+                self.hits += 1
+                return cached, int(nbytes)
+            self.misses += 1
+        if self.disk_bw > 0:
+            time.sleep(nbytes / self.disk_bw)
+        if isinstance(chunk, tuple):
+            arr = (jax.device_put(chunk[0]), float(chunk[1]))
+        else:
+            arr = jax.device_put(chunk)
+        if self.cache is not None:
+            if not self.cache.put((self.cache_key, w, ci), arr, nbytes,
+                                  pin=True):
+                with self.lock:
+                    self.uncached_bytes[w] = \
+                        self.uncached_bytes.get(w, 0) + int(nbytes)
+        return arr, int(nbytes)
 
     def run(self):
         for l in sorted(self.plan.loads):
@@ -255,25 +311,25 @@ class _Loader(threading.Thread):
             if ev is not None:
                 ev.wait()
             for task in self.plan.loads[l]:
-                hcs = self.host_chunks[task.weight]
+                w = task.weight
+                if w in self.assembled or self.ready[w].is_set():
+                    continue
+                if self.cache is not None and w not in self.arrived:
+                    full = self.cache.acquire((self.cache_key, w, "w"))
+                    if full is not None:               # assembled on device
+                        self.hits += 1
+                        self.assembled[w] = full
+                        self.ready[w].set()
+                        continue
+                    self.misses += 1
+                hcs = self.host_chunks[w]
                 for ci in range(task.chunk_lo, min(task.chunk_hi, len(hcs))):
-                    chunk = hcs[ci]
-                    if isinstance(chunk, tuple):       # (int8, scale)
-                        payload, scale = chunk
-                        if self.disk_bw > 0:
-                            time.sleep(payload.nbytes / self.disk_bw)
-                        arr = (jax.device_put(payload), float(scale))
-                        nbytes = payload.nbytes
-                    else:
-                        if self.disk_bw > 0:
-                            time.sleep(chunk.nbytes / self.disk_bw)
-                        arr = jax.device_put(chunk)
-                        nbytes = chunk.nbytes
+                    arr, nbytes = self._load_chunk(w, ci, hcs[ci])
                     with self.lock:
-                        self.arrived.setdefault(task.weight, []).append(arr)
-                        self.bytes_in_flight += int(nbytes)
-                if len(self.arrived.get(task.weight, ())) >= len(hcs):
-                    self.ready[task.weight].set()
+                        self.arrived.setdefault(w, []).append(arr)
+                        self.bytes_in_flight += nbytes
+                if len(self.arrived.get(w, ())) >= len(hcs):
+                    self.ready[w].set()
 
 
 class StreamingExecutor:
@@ -281,25 +337,43 @@ class StreamingExecutor:
 
     def __init__(self, model: HostModel, plan: OverlapPlan,
                  disk_bw: float = 0.0, gate_loads: bool = True,
-                 quantize_stream: bool = False):
+                 quantize_stream: bool = False,
+                 cache: Optional[WeightCache] = None,
+                 cache_key: Optional[str] = None):
         # gate_loads paces the loader by compute progress: a task assigned
         # to op l is issued when compute reaches op l (the plan's lookahead
         # IS the overlap); ungated, a fast loader front-runs the plan and
         # residency converges to preload-all.
         # quantize_stream ships int8 chunks + per-chunk scale and
         # dequantizes at assembly (beyond-paper: 4x fewer streamed bytes).
+        # cache binds the run to a shared budgeted device pool: weights are
+        # checked out of / into the pool, survive the run unpinned for
+        # future requests, and residency reports the pool's global usage.
         self.model = model
         self.plan = plan
         self.disk_bw = disk_bw
         self.gate_loads = gate_loads
         self.quantize_stream = quantize_stream
+        self.cache = cache
+        self.cache_key = cache_key or model.graph.name
         self.last_use = {w.name: w.consumer
                          for w in model.graph.weights.values()}
 
+    def _residency(self, dev, loader, transient) -> int:
+        if self.cache is not None:
+            with loader.lock:
+                uncached = sum(loader.uncached_bytes.values())
+            return self.cache.used_bytes() + sum(transient.values()) + uncached
+        with loader.lock:
+            inflight = sum(
+                int(c[0].nbytes if isinstance(c, tuple) else c.nbytes)
+                for lst in loader.arrived.values() for c in lst)
+        return sum(int(v.nbytes) for v in dev.values()) + inflight
+
     def run(self, tokens: np.ndarray) -> RunStats:
-        m, plan = self.model, self.plan
-        stats = RunStats()
-        host_chunks = {w: _chunk_rows(m.host_weights[w], plan.chunk_bytes)
+        m, plan, cache, key = self.model, self.plan, self.cache, self.cache_key
+        stats = RunStats(model=key)
+        host_chunks = {w: chunk_rows(m.host_weights[w], plan.chunk_bytes)
                        for w in m.graph.weights}
         if self.quantize_stream:
             host_chunks = {
@@ -307,16 +381,31 @@ class StreamingExecutor:
                 for w, lst in host_chunks.items()}
 
         dev: Dict[str, jax.Array] = {}
+        transient: Dict[str, int] = {}    # on-device but pool-rejected bytes
         t0 = time.perf_counter()
         for w in plan.preload:
-            if self.disk_bw > 0:
-                time.sleep(m.host_weights[w].nbytes / self.disk_bw)
-            dev[w] = jax.device_put(m.host_weights[w])
+            arr = None
+            if cache is not None:
+                arr = cache.acquire((key, w, "w"))
+                if arr is not None:
+                    stats.cache_hits += 1
+                else:
+                    stats.cache_misses += 1
+            if arr is None:
+                nbytes = m.host_weights[w].nbytes
+                if self.disk_bw > 0:
+                    time.sleep(nbytes / self.disk_bw)
+                arr = jax.device_put(m.host_weights[w])
+                if cache is not None and not cache.put((key, w, "w"), arr,
+                                                       nbytes, pin=True):
+                    transient[w] = int(nbytes)
+            dev[w] = arr
         for v in dev.values():
             v.block_until_ready()
         stats.init_s = time.perf_counter() - t0
 
-        loader = _Loader(plan, host_chunks, self.disk_bw)
+        loader = _Loader(plan, host_chunks, self.disk_bw, cache=cache,
+                         cache_key=key)
         if self.gate_loads:
             loader.gate = {l: threading.Event() for l in plan.loads}
         loader.start()
@@ -329,35 +418,52 @@ class StreamingExecutor:
             if op.weights:
                 wname = op.weights[0]
                 if wname not in dev:
-                    if not loader.ready[wname].is_set():
-                        stats.stall_events += 1
-                        loader.ready[wname].wait(timeout=60.0)
-                    with loader.lock:
-                        got = loader.arrived.pop(wname, [])
-                    if len(got) < len(host_chunks[wname]):   # plan miss
-                        for c in host_chunks[wname][len(got):]:
-                            got.append((jax.device_put(c[0]), float(c[1]))
-                                       if isinstance(c, tuple)
-                                       else jax.device_put(c))
-                    got = [g[0].astype(jnp.float32) * g[1]
-                           if isinstance(g, tuple) else g for g in got]
-                    dev[wname] = got[0] if len(got) == 1 else \
-                        jnp.concatenate(got, axis=0)
+                    full = loader.assembled.get(wname) \
+                        if cache is not None else None
+                    if full is None:
+                        if not loader.ready[wname].is_set():
+                            stats.stall_events += 1
+                            loader.ready[wname].wait(timeout=60.0)
+                        full = loader.assembled.get(wname) \
+                            if cache is not None else None
+                    if full is None:
+                        with loader.lock:
+                            got = loader.arrived.pop(wname, [])
+                        if len(got) < len(host_chunks[wname]):   # plan miss
+                            for c in host_chunks[wname][len(got):]:
+                                got.append((jax.device_put(c[0]), float(c[1]))
+                                           if isinstance(c, tuple)
+                                           else jax.device_put(c))
+                        got = [g[0].astype(jnp.float32) * g[1]
+                               if isinstance(g, tuple) else g for g in got]
+                        full = got[0] if len(got) == 1 else \
+                            jnp.concatenate(got, axis=0)
+                        if cache is not None:
+                            # chunk entries are consumed into the assembled
+                            # weight; re-key so future runs hit it whole
+                            for ci in range(len(host_chunks[wname])):
+                                cache.remove((key, wname, ci))
+                            with loader.lock:
+                                loader.uncached_bytes.pop(wname, None)
+                            if not cache.put((key, wname, "w"), full,
+                                             int(full.nbytes), pin=True):
+                                transient[wname] = int(full.nbytes)
+                    dev[wname] = full
                 warr = dev[wname]
             regs = m.programs[op_tag(op.name)](regs, warr)
             for wname in op.weights:
                 if self.last_use[wname] <= op.index:
                     dev.pop(wname, None)
-            with loader.lock:
-                inflight = sum(
-                    int(c[0].nbytes if isinstance(c, tuple) else c.nbytes)
-                    for lst in loader.arrived.values() for c in lst)
-            resident = sum(int(v.nbytes) for v in dev.values()) + inflight
-            stats.residency.append(resident)
+                    if cache is not None:
+                        cache.release((key, wname, "w"))
+                        transient.pop(wname, None)
+            stats.residency.append(self._residency(dev, loader, transient))
         jax.tree.map(lambda x: x.block_until_ready()
                      if hasattr(x, "block_until_ready") else x, regs)
         stats.exec_s = time.perf_counter() - t1
         loader.join(timeout=10.0)
+        stats.cache_hits += loader.hits
+        stats.cache_misses += loader.misses
         stats.peak_bytes = max(stats.residency, default=0)
         stats.avg_bytes = float(np.mean(stats.residency)) if stats.residency else 0
         stats.result = regs.get("h", regs.get("x"))
@@ -365,20 +471,45 @@ class StreamingExecutor:
 
 
 class PreloadExecutor:
-    """Baseline: load + transform everything, then execute (MNN/SmartMem)."""
+    """Baseline: load + transform everything, then execute (MNN/SmartMem).
 
-    def __init__(self, model: HostModel, disk_bw: float = 0.0):
+    With a shared WeightCache, already-resident weights skip the storage
+    stage and device_put; everything it loads is checked into the pool and
+    unpinned after the run, so a later streaming run of the same model hits
+    device-resident weights."""
+
+    def __init__(self, model: HostModel, disk_bw: float = 0.0,
+                 cache: Optional[WeightCache] = None,
+                 cache_key: Optional[str] = None):
         self.model = model
         self.disk_bw = disk_bw
+        self.cache = cache
+        self.cache_key = cache_key or model.graph.name
 
     def run(self, tokens: np.ndarray) -> RunStats:
-        m = self.model
-        stats = RunStats()
+        m, cache, key = self.model, self.cache, self.cache_key
+        stats = RunStats(model=key)
+        dev: Dict[str, jax.Array] = {}
+        transient = 0                      # on-device but pool-rejected bytes
         t0 = time.perf_counter()
-        if self.disk_bw > 0:
-            total = sum(a.nbytes for a in m.host_weights.values())
-            time.sleep(total / self.disk_bw)
-        dev = {w: jax.device_put(arr) for w, arr in m.host_weights.items()}
+        missing = []
+        for w, arr in m.host_weights.items():
+            cached = cache.acquire((key, w, "w")) if cache is not None else None
+            if cached is not None:
+                stats.cache_hits += 1
+                dev[w] = cached
+            else:
+                if cache is not None:
+                    stats.cache_misses += 1
+                missing.append(w)
+        if self.disk_bw > 0 and missing:
+            time.sleep(sum(m.host_weights[w].nbytes for w in missing)
+                       / self.disk_bw)
+        for w in missing:
+            dev[w] = jax.device_put(m.host_weights[w])
+            if cache is not None and not cache.put(
+                    (key, w, "w"), dev[w], m.host_weights[w].nbytes, pin=True):
+                transient += int(m.host_weights[w].nbytes)
         for v in dev.values():
             v.block_until_ready()
         stats.init_s = time.perf_counter() - t0
@@ -391,9 +522,14 @@ class PreloadExecutor:
         jax.tree.map(lambda x: x.block_until_ready()
                      if hasattr(x, "block_until_ready") else x, regs)
         stats.exec_s = time.perf_counter() - t1
-        total = sum(a.nbytes for a in m.host_weights.values())
-        stats.residency = [total] * len(m.graph.ops)
-        stats.peak_bytes = total
-        stats.avg_bytes = float(total)
+        if cache is not None:
+            resident = cache.used_bytes() + transient
+            for w in m.host_weights:
+                cache.release((key, w, "w"))
+        else:
+            resident = sum(a.nbytes for a in m.host_weights.values())
+        stats.residency = [resident] * len(m.graph.ops)
+        stats.peak_bytes = resident
+        stats.avg_bytes = float(resident)
         stats.result = regs.get("h", regs.get("x"))
         return stats

@@ -27,6 +27,8 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--m-peak-mb", type=int, default=96)
     ap.add_argument("--disk-gbps", type=float, default=0.5)
+    ap.add_argument("--budget-mb", type=int, default=0,
+                    help="shared device pool budget (0 = no shared cache)")
     ap.add_argument("--layers", type=int, default=0,
                     help="override layer count (reduced models)")
     args = ap.parse_args(argv)
@@ -34,7 +36,8 @@ def main(argv=None):
     names = args.models.split(",")
     engine = ServingEngine(policy=args.policy,
                            m_peak=args.m_peak_mb << 20,
-                           disk_bw=args.disk_gbps * 1e9)
+                           disk_bw=args.disk_gbps * 1e9,
+                           budget_bytes=(args.budget_mb << 20) or None)
     rng = np.random.default_rng(0)
     for i, n in enumerate(names):
         cfg = get_arch(n).model
@@ -55,7 +58,9 @@ def main(argv=None):
               f"(init {r.init_s:.3f} exec {r.exec_s:.3f}) "
               f"peak {r.peak_bytes/1e6:.1f}MB")
     print(f"GLOBAL peak {engine.peak_memory()/1e6:.1f}MB "
-          f"avg {engine.avg_memory()/1e6:.1f}MB policy={args.policy}")
+          f"avg {engine.avg_memory()/1e6:.1f}MB "
+          f"pool hit rate {engine.cache_hit_rate():.2f} "
+          f"policy={args.policy}")
     return responses, engine
 
 

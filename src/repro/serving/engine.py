@@ -1,31 +1,51 @@
-"""FIFO multi-model serving engine (paper §2.2 / Fig 6).
+"""Multi-DNN streaming serving engine (paper §2.2 / §4.4, Fig 6).
 
-Models are registered with their overlap plans; requests queue FIFO; the
-engine runs each request through its model's StreamingExecutor (or
-PreloadExecutor for the baseline mode) and tracks the *global* residency
-timeline across model switches — the paper's multi-DNN memory metric.
+Models are registered with the engine; requests queue per model and are
+*interleaved* round-robin across models (per-model FIFO preserved). All
+executors share one budgeted ``WeightCache`` — the device-memory pool —
+and the engine plans every registered model jointly via
+``plan_multi_model`` so each model's execution peak fits the pool budget.
+
+While request *k* executes, the engine overlaps request *k+1*'s model:
+
+  * plan-aware protection — cached entries the next model's OverlapPlan
+    schedules earliest are PINNED, so the current model's streaming
+    pressure recycles its own bytes instead of evicting exactly what the
+    schedule needs next (a shared LRU pool thrashes on sequential weight
+    scans without this);
+  * prefetch — within the headroom ``budget - peak(current)``, the next
+    model's preload weights and earliest-scheduled chunks are loaded into
+    the pool by a background thread (the cross-model analogue of the
+    paper's intra-model compute/load overlap).
 
 Two policies:
-  * "stream"  — FlashMem: each model's weights stream per its plan and are
-    freed at last use, so the switch cost is bounded by M_peak, and model
-    k+1's early chunks can load while model k computes (cross-model
-    pipelining via the shared loader budget).
-  * "preload" — each switch loads the full model then runs (MNN-style);
-    peak = max model size (plus any kept-resident models).
+  * "stream"  — FlashMem: per-model OverlapPlans, chunks checked in/out of
+    the shared pool, freed at last use.
+  * "preload" — each request loads its full model then runs (MNN-style);
+    with a shared pool it still gets cross-request residency hits.
+
+Without ``budget_bytes`` the engine runs cache-less (seed behaviour):
+per-request streaming against ``m_peak``, no cross-model state, and
+global-FIFO response order (interleaving defaults on only with a shared
+pool; pass ``interleave=`` explicitly to override either way).
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.core.capacity import HWSpec, capacities
 from repro.core.opg import OPGProblem
-from repro.core.plan import OverlapPlan
+from repro.core.plan import MultiModelPlan, OverlapPlan, plan_multi_model
 from repro.core.solver import SolverConfig, solve
-from repro.core.streaming import HostModel, PreloadExecutor, StreamingExecutor
+from repro.core.streaming import (HostModel, PreloadExecutor, RunStats,
+                                  StreamingExecutor, chunk_rows)
+from repro.serving.weight_cache import WeightCache
 
 
 @dataclass
@@ -42,13 +62,36 @@ class Response:
     init_s: float
     exec_s: float
     peak_bytes: int
+    avg_bytes: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_hit_rate: float = 0.0
+    result: object = None
+
+
+@dataclass
+class ModelReport:
+    """Per-model aggregate over a run_all batch."""
+    requests: int = 0
+    peak_bytes: int = 0
+    avg_bytes: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
 
 class ServingEngine:
     def __init__(self, *, policy: str = "stream", chunk_bytes: int = 1 << 20,
                  m_peak: int = 256 << 20, hw: Optional[HWSpec] = None,
                  disk_bw: float = 0.0,
-                 solver_cfg: Optional[SolverConfig] = None):
+                 solver_cfg: Optional[SolverConfig] = None,
+                 budget_bytes: Optional[int] = None,
+                 prefetch: bool = True,
+                 interleave: Optional[bool] = None):
         assert policy in ("stream", "preload")
         self.policy = policy
         self.chunk_bytes = chunk_bytes
@@ -56,47 +99,215 @@ class ServingEngine:
         self.hw = hw or HWSpec.cpu_calibrated()
         self.disk_bw = disk_bw
         self.solver_cfg = solver_cfg
+        self.budget_bytes = budget_bytes
+        self.cache = WeightCache(budget_bytes) if budget_bytes else None
+        self.prefetch = prefetch and self.cache is not None
+        # default: interleave only with a shared pool; cache-less mode keeps
+        # the seed engine's global-FIFO response order (callers pair
+        # responses with submissions by index)
+        self.interleave = (self.cache is not None) if interleave is None \
+            else interleave
         self.models: Dict[str, HostModel] = {}
         self.plans: Dict[str, OverlapPlan] = {}
+        self.multi_plan: Optional[MultiModelPlan] = None
         self.queue: List[Request] = []
         self.timeline: List[tuple] = []       # (t, resident_bytes, model)
+        self.stats_log: List[RunStats] = []
+        self._executors: Dict[str, object] = {}
+        self._protected: Dict[str, List[tuple]] = {}
+        self._planned = False
 
     # -- registration ------------------------------------------------------
     def register(self, name: str, model: HostModel):
         self.models[name] = model
-        if self.policy == "stream":
+        self._planned = False
+        # re-planning replaces EVERY model's plan (the budget is shared),
+        # so every cached executor is stale, not just this model's
+        self._executors.clear()
+        if self.policy == "stream" and self.cache is None:
+            # legacy single-model planning against m_peak (no shared pool)
             g = model.graph
             caps = capacities(g, self.chunk_bytes, self.hw)
             prob = OPGProblem(g, self.chunk_bytes, self.m_peak, caps)
             sol = solve(prob, self.solver_cfg)
             self.plans[name] = OverlapPlan.from_solution(prob, sol)
 
-    # -- FIFO --------------------------------------------------------------
+    def _ensure_planned(self):
+        if self._planned:
+            return
+        if self.policy == "stream" and self.cache is not None:
+            self.multi_plan = plan_multi_model(
+                {n: m.graph for n, m in self.models.items()},
+                self.chunk_bytes, self.budget_bytes, hw=self.hw,
+                solver_cfg=self.solver_cfg)
+            self.plans = dict(self.multi_plan.plans)
+        self._planned = True
+
+    def _executor(self, name: str):
+        ex = self._executors.get(name)
+        if ex is None:
+            if self.policy == "stream":
+                ex = StreamingExecutor(self.models[name], self.plans[name],
+                                       disk_bw=self.disk_bw, cache=self.cache,
+                                       cache_key=name)
+            else:
+                ex = PreloadExecutor(self.models[name], disk_bw=self.disk_bw,
+                                     cache=self.cache, cache_key=name)
+            self._executors[name] = ex
+        return ex
+
+    # -- scheduling --------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _schedule(self) -> List[Request]:
+        """Interleave across models round-robin, preserving each model's
+        FIFO order — the multi-DNN mix the paper's Fig 6 measures."""
+        if not self.interleave:
+            out, self.queue = self.queue, []
+            return out
+        per_model: Dict[str, List[Request]] = {}
+        for r in self.queue:
+            per_model.setdefault(r.model, []).append(r)
+        self.queue = []
+        out: List[Request] = []
+        while any(per_model.values()):
+            for name in list(per_model):
+                if per_model[name]:
+                    out.append(per_model[name].pop(0))
+        return out
+
+    # -- cross-model overlap ----------------------------------------------
+    def _peak_estimate(self, name: str) -> int:
+        if self.multi_plan is not None and name in self.multi_plan.peaks:
+            return self.multi_plan.peaks[name]
+        return sum(a.nbytes for a in self.models[name].host_weights.values())
+
+    def _protect_and_prefetch(self, name: str, limit: int,
+                              stop: threading.Event):
+        """Pin the next model's earliest-scheduled resident entries and
+        stream its missing ones into the pool, spending at most `limit`
+        bytes of pinned+prefetched residency. Runs on a background thread
+        while the current model computes; `stop` is set when that model
+        finishes so the thread winds down before pins are released."""
+        cache, model = self.cache, self.models[name]
+        pinned = self._protected.setdefault(name, [])
+        used = 0
+
+        def hold(key, nbytes_if_load=None, host=None):
+            nonlocal used
+            if stop.is_set():
+                return False
+            got = cache.pin_existing(key)
+            if got is not None:
+                if used + got > limit:
+                    cache.release(key)
+                    return False
+                pinned.append(key)
+                used += got
+                return True
+            if host is None:
+                return True                       # nothing resident, no load
+            if used + nbytes_if_load > limit:
+                return False
+            if self.disk_bw > 0:
+                # simulated storage stage, interruptible: a set stop flag
+                # must not leave run_all joining through a long sleep
+                if stop.wait(timeout=nbytes_if_load / self.disk_bw):
+                    return False
+            if stop.is_set():
+                return False
+            arr = (jax.device_put(host[0]), float(host[1])) \
+                if isinstance(host, tuple) else jax.device_put(host)
+            if cache.put(key, arr, nbytes_if_load, pin=True):
+                pinned.append(key)
+                used += nbytes_if_load
+            return True
+
+        if self.policy == "stream":
+            plan = self.plans[name]
+            sizes = {w: model.host_weights[w].nbytes
+                     for w in model.graph.weights}
+            whole, chunks = self.multi_plan.prefetch_schedule(
+                name, sizes, limit) if self.multi_plan is not None \
+                else (list(plan.preload), [])
+            for w in whole:
+                if not hold((name, w, "w"), sizes[w], model.host_weights[w]):
+                    return
+            host_chunks = {}
+            for t in chunks:
+                if cache.contains((name, t.weight, "w")):
+                    hold((name, t.weight, "w"))   # pin assembled, skip chunks
+                    continue
+                if t.weight not in host_chunks:
+                    host_chunks[t.weight] = chunk_rows(
+                        model.host_weights[t.weight], plan.chunk_bytes)
+                hcs = host_chunks[t.weight]
+                for ci in range(t.chunk_lo, min(t.chunk_hi, len(hcs))):
+                    if not hold((name, t.weight, ci), hcs[ci].nbytes, hcs[ci]):
+                        return
+            # protect the remainder of what's already resident, in op order
+            for w in model.graph.weights:
+                if used >= limit or stop.is_set():
+                    return
+                hold((name, w, "w"))
+        else:
+            for w in model.graph.weights:
+                if not hold((name, w, "w"), model.host_weights[w].nbytes,
+                            model.host_weights[w]):
+                    return
+
+    def _release_protection(self, name: str):
+        for key in self._protected.pop(name, []):
+            self.cache.release(key)
+
+    # -- execution ---------------------------------------------------------
     def run_all(self) -> List[Response]:
-        out = []
+        self._ensure_planned()
+        ordered = self._schedule()
+        out: List[Response] = []
         t_base = time.perf_counter()
-        while self.queue:
-            req = self.queue.pop(0)
-            model = self.models[req.model]
+        prefetcher: Optional[threading.Thread] = None
+        pf_stop: Optional[threading.Event] = None
+        for i, req in enumerate(ordered):
+            nxt = ordered[i + 1] if i + 1 < len(ordered) else None
+            if (self.prefetch and nxt is not None
+                    and nxt.model != req.model):
+                if self.multi_plan is not None:
+                    limit = self.multi_plan.prefetch_budget(req.model,
+                                                            reserve=0.1)
+                else:       # preload policy: no plan, size from model bytes
+                    limit = max(0, int(0.9 * self.budget_bytes)
+                                - self._peak_estimate(req.model))
+                pf_stop = threading.Event()
+                prefetcher = threading.Thread(
+                    target=self._protect_and_prefetch,
+                    args=(nxt.model, limit, pf_stop), daemon=True)
+                prefetcher.start()
             t0 = time.perf_counter()
-            if self.policy == "stream":
-                ex = StreamingExecutor(model, self.plans[req.model],
-                                       disk_bw=self.disk_bw)
-                stats = ex.run(req.tokens)
-            else:
-                stats = PreloadExecutor(model, disk_bw=self.disk_bw).run(
-                    req.tokens)
+            stats = self._executor(req.model).run(req.tokens)
             dt = time.perf_counter() - t0
+            if prefetcher is not None:
+                # the stop flag bounds the join: the thread checks it before
+                # every hold, so no pin can be appended after this returns
+                # and _release_protection cannot orphan a live pin list
+                pf_stop.set()
+                prefetcher.join()
+                prefetcher, pf_stop = None, None
+            self._release_protection(req.model)
+            result, stats.result = stats.result, None   # keep the log light:
+            self.stats_log.append(stats)                # the tensor goes to
+                                                        # the Response only
             base_t = t0 - t_base
             n = max(len(stats.residency), 1)
-            for i, r in enumerate(stats.residency):
-                self.timeline.append((base_t + dt * (i + 1) / n, r,
+            for j, r in enumerate(stats.residency):
+                self.timeline.append((base_t + dt * (j + 1) / n, r,
                                       req.model))
-            out.append(Response(req.model, dt, stats.init_s, stats.exec_s,
-                                stats.peak_bytes))
+            out.append(Response(
+                req.model, dt, stats.init_s, stats.exec_s, stats.peak_bytes,
+                avg_bytes=stats.avg_bytes, cache_hits=stats.cache_hits,
+                cache_misses=stats.cache_misses,
+                cache_hit_rate=stats.cache_hit_rate, result=result))
         return out
 
     # -- metrics -----------------------------------------------------------
@@ -106,3 +317,20 @@ class ServingEngine:
     def avg_memory(self) -> float:
         vals = [r for _, r, _ in self.timeline]
         return float(np.mean(vals)) if vals else 0.0
+
+    def cache_hit_rate(self) -> float:
+        hits = sum(s.cache_hits for s in self.stats_log)
+        misses = sum(s.cache_misses for s in self.stats_log)
+        return hits / (hits + misses) if hits + misses else 0.0
+
+    def model_report(self) -> Dict[str, ModelReport]:
+        """Per-model peak/avg memory and cache hit rate over run history."""
+        rep: Dict[str, ModelReport] = {}
+        for s in self.stats_log:
+            r = rep.setdefault(s.model, ModelReport())
+            r.requests += 1
+            r.peak_bytes = max(r.peak_bytes, s.peak_bytes)
+            r.avg_bytes += (s.avg_bytes - r.avg_bytes) / r.requests
+            r.cache_hits += s.cache_hits
+            r.cache_misses += s.cache_misses
+        return rep

@@ -1,0 +1,234 @@
+"""WeightCache — shared budgeted device-memory pool for multi-DNN serving.
+
+The paper's multi-DNN story (§1, §4.4) is that several models share scarce
+device memory: weights stream in on demand instead of every model being
+preloaded. This module is the pool those weights live in. Executors and the
+engine's cross-model prefetcher check weight *chunks* (and assembled
+weights) in and out under a single byte budget:
+
+  * entries are keyed by ``(model, weight, chunk)`` tuples — chunk is an
+    int index for in-flight pieces or ``"w"`` for an assembled weight;
+  * ``acquire`` pins an entry (it cannot be evicted while an executor or
+    prefetcher holds it) and counts a hit; a miss is counted so callers
+    get end-to-end hit-rate accounting per model;
+  * ``put`` inserts under the budget, evicting least-recently-used
+    *unpinned* entries to make room; if even full eviction cannot fit the
+    entry, the put is rejected (the caller keeps a transient array) — the
+    pool's ``used_bytes`` therefore NEVER exceeds ``budget_bytes``;
+  * pinning is how plans become eviction policy: the engine pins exactly
+    the chunks the next model's OverlapPlan schedules earliest, so LRU
+    pressure from the currently-executing model cannot throw away bytes
+    that are about to be consumed ("plan-aware pinned eviction").
+
+Thread-safe: the engine's prefetch thread, executor loader threads, and
+the compute thread all touch the pool concurrently.
+
+NOTE: this module must stay free of `repro` imports — core/streaming.py
+imports it while serving/engine.py imports core, so any repro dependency
+added here risks an import cycle through core/__init__.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    rejected_puts: int = 0
+    inserted_bytes: int = 0
+    evicted_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "rejected_puts": self.rejected_puts,
+                "hit_rate": self.hit_rate}
+
+
+@dataclass
+class _Entry:
+    value: Any
+    nbytes: int
+    pins: int = 0
+
+
+class WeightCache:
+    """Budgeted LRU pool of device-resident weight chunks.
+
+    Keys are tuples whose first element is the owning model's name — all
+    per-model accounting (hit rate, resident bytes) derives from that.
+    """
+
+    def __init__(self, budget_bytes: int, name: str = "pool"):
+        assert budget_bytes > 0, "cache budget must be positive"
+        self.budget_bytes = int(budget_bytes)
+        self.name = name
+        self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
+        self._used = 0
+        self._lock = threading.RLock()
+        self.stats = CacheStats()
+        self._model_stats: Dict[str, CacheStats] = {}
+
+    # -- internals ---------------------------------------------------------
+    @staticmethod
+    def _model_of(key: Tuple) -> str:
+        return key[0] if isinstance(key, tuple) and key else str(key)
+
+    def _mstats(self, key: Tuple) -> CacheStats:
+        return self._model_stats.setdefault(self._model_of(key), CacheStats())
+
+    def _evict_until(self, need: int) -> bool:
+        """Evict LRU unpinned entries until `need` free bytes exist."""
+        if need > self.budget_bytes:
+            return False
+        while self.budget_bytes - self._used < need:
+            victim = None
+            for k, e in self._entries.items():       # OrderedDict = LRU order
+                if e.pins == 0:
+                    victim = k
+                    break
+            if victim is None:
+                return False
+            e = self._entries.pop(victim)
+            self._used -= e.nbytes
+            self.stats.evictions += 1
+            self.stats.evicted_bytes += e.nbytes
+            self._mstats(victim).evictions += 1
+        return True
+
+    # -- core API ----------------------------------------------------------
+    def acquire(self, key: Tuple) -> Optional[Any]:
+        """Pin + return the cached value, or None (miss) — both counted."""
+        with self._lock:
+            e = self._entries.get(key)
+            ms = self._mstats(key)
+            if e is None:
+                self.stats.misses += 1
+                ms.misses += 1
+                return None
+            e.pins += 1
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            ms.hits += 1
+            return e.value
+
+    def put(self, key: Tuple, value: Any, nbytes: int,
+            pin: bool = False) -> bool:
+        """Insert under budget; returns False (rejected) if it cannot fit
+        after evicting every unpinned entry. A rejected value stays the
+        caller's transient responsibility — the pool never over-commits."""
+        nbytes = int(nbytes)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:                       # refresh existing entry
+                if pin:
+                    e.pins += 1
+                self._entries.move_to_end(key)
+                return True
+            if not self._evict_until(nbytes):
+                self.stats.rejected_puts += 1
+                self._mstats(key).rejected_puts += 1
+                return False
+            self._entries[key] = _Entry(value, nbytes, pins=1 if pin else 0)
+            self._used += nbytes
+            self.stats.inserted_bytes += nbytes
+            self._mstats(key).inserted_bytes += nbytes
+            return True
+
+    def pin_existing(self, key: Tuple) -> Optional[int]:
+        """Pin an already-resident entry WITHOUT hit/miss accounting;
+        returns its nbytes, or None if absent. This is the engine's
+        plan-aware protection primitive: entries the schedule says are
+        needed soon get pinned so the current model's LRU pressure cannot
+        evict them (sequential streaming otherwise thrashes a shared LRU
+        pool — every insert evicts exactly the bytes needed next)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return None
+            e.pins += 1
+            self._entries.move_to_end(key)
+            return e.nbytes
+
+    def release(self, key: Tuple):
+        """Unpin (no-op for absent keys — the entry may have been consumed
+        and removed by the executor that assembled it)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and e.pins > 0:
+                e.pins -= 1
+
+    def remove(self, key: Tuple) -> bool:
+        """Drop an entry regardless of pins — used by the owning executor
+        when chunk entries are consumed into an assembled weight."""
+        with self._lock:
+            e = self._entries.pop(key, None)
+            if e is None:
+                return False
+            self._used -= e.nbytes
+            return True
+
+    # -- queries -----------------------------------------------------------
+    def contains(self, key: Tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def touch(self, key: Tuple):
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
+
+    def free_bytes(self) -> int:
+        with self._lock:
+            return self.budget_bytes - self._used
+
+    def pinned_bytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self._entries.values() if e.pins)
+
+    def hit_rate(self) -> float:
+        with self._lock:
+            return self.stats.hit_rate
+
+    def model_stats(self, model: str) -> CacheStats:
+        with self._lock:
+            return self._model_stats.setdefault(model, CacheStats())
+
+    def model_bytes(self, model: str) -> int:
+        with self._lock:
+            return sum(e.nbytes for k, e in self._entries.items()
+                       if self._model_of(k) == model)
+
+    def keys(self):
+        with self._lock:
+            return list(self._entries)
+
+    def evict_model(self, model: str) -> int:
+        """Drop every unpinned entry of one model; returns bytes freed."""
+        with self._lock:
+            freed = 0
+            for k in [k for k, e in self._entries.items()
+                      if self._model_of(k) == model and e.pins == 0]:
+                freed += self._entries[k].nbytes
+                self.remove(k)
+            return freed
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            self._used = 0

@@ -1,11 +1,20 @@
-"""MoE dispatch/combine invariants (hypothesis property tests)."""
-import hypothesis.strategies as st
+"""MoE dispatch/combine invariants.
+
+The module always collects: the hypothesis property case runs only when
+`hypothesis` is installed (requirements-dev.txt); a deterministic
+parametrized variant of the same gather==dense invariant always runs.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from dataclasses import replace
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env-dependent
+    st = None
 
 from repro.configs import get_arch
 from repro.launch.mesh import make_host_mesh
@@ -21,10 +30,7 @@ def _cfg(n_experts=8, top_k=2, cf=8.0):
                                     top_k=top_k, capacity_factor=cf))
 
 
-@settings(max_examples=12, deadline=None)
-@given(b=st.integers(1, 4), s=st.sampled_from([8, 16]),
-       e=st.sampled_from([4, 8]), k=st.integers(1, 3))
-def test_gather_matches_dense_at_high_capacity(b, s, e, k):
+def _check_gather_matches_dense(b, s, e, k):
     """With cf high enough that nothing drops, the production gather path
     equals the dense reference exactly, for any (B,S,E,k)."""
     cfg = _cfg(n_experts=e, top_k=min(k, e), cf=float(2 * e))
@@ -36,6 +42,25 @@ def test_gather_matches_dense_at_high_capacity(b, s, e, k):
     assert float(auxg["dropped_frac"]) == 0.0
     np.testing.assert_allclose(np.asarray(yg, np.float32),
                                np.asarray(yd, np.float32), atol=0.06)
+
+
+if st is not None:
+    @settings(max_examples=12, deadline=None)
+    @given(b=st.integers(1, 4), s=st.sampled_from([8, 16]),
+           e=st.sampled_from([4, 8]), k=st.integers(1, 3))
+    def test_gather_matches_dense_at_high_capacity(b, s, e, k):
+        _check_gather_matches_dense(b, s, e, k)
+else:
+    def test_property_cases_need_hypothesis():
+        pytest.skip("hypothesis not installed; property-based MoE case "
+                    "skipped (deterministic variants below still run)")
+
+
+@pytest.mark.parametrize("b,s,e,k", [
+    (1, 8, 4, 1), (2, 16, 8, 2), (3, 8, 8, 3), (4, 16, 4, 2),
+])
+def test_gather_matches_dense_at_high_capacity_seeded(b, s, e, k):
+    _check_gather_matches_dense(b, s, e, k)
 
 
 def test_dropped_tokens_pass_through_as_zero():

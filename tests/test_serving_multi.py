@@ -1,0 +1,185 @@
+"""Multi-DNN serving runtime system tests: two models sharing a device
+budget smaller than their combined weights, streamed outputs bit-for-bit
+equal to the preload baseline, pool accounting (serving/engine.py +
+serving/weight_cache.py + core/streaming.py)."""
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core import (HostModel, OPGProblem, OverlapPlan, PreloadExecutor,
+                        StreamingExecutor, build_lm_graph, capacities, solve)
+from repro.core.capacity import HWSpec
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.weight_cache import WeightCache
+
+CFG_A = replace(GPTNEO_S, num_layers=4, d_model=256, n_heads=4, n_kv_heads=4,
+                d_ff=1024, vocab=1024, name="model-a")
+CFG_B = replace(CFG_A, num_layers=6, name="model-b")
+SEQ = 64
+CHUNK = 256 << 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ma = HostModel.build(CFG_A, seq=SEQ, seed=0)
+    mb = HostModel.build(CFG_B, seq=SEQ, seed=1)
+    rng = np.random.default_rng(0)
+    toks = {"a": rng.integers(0, CFG_A.vocab, (1, SEQ), dtype=np.int32),
+            "b": rng.integers(0, CFG_B.vocab, (1, SEQ), dtype=np.int32)}
+    refs = {"a": np.asarray(PreloadExecutor(ma).run(toks["a"]).result),
+            "b": np.asarray(PreloadExecutor(mb).run(toks["b"]).result)}
+    return ma, mb, toks, refs
+
+
+def _engine(policy, budget, **kw):
+    eng = ServingEngine(policy=policy, chunk_bytes=CHUNK,
+                        budget_bytes=budget, **kw)
+    return eng
+
+
+def test_two_models_under_shared_budget(setup):
+    """The acceptance scenario: device budget < combined weights; both
+    requests complete, peak memory stays under budget, hit rate is
+    reported, and every streamed output equals the preload output
+    bit-for-bit."""
+    ma, mb, toks, refs = setup
+    combined = sum(a.nbytes for a in ma.host_weights.values()) \
+        + sum(a.nbytes for a in mb.host_weights.values())
+    budget = int(0.6 * combined)
+    assert budget < combined
+    eng = _engine("stream", budget)
+    eng.register("a", ma)
+    eng.register("b", mb)
+    for _ in range(2):
+        for n in ("a", "b"):
+            eng.submit(Request(model=n, tokens=toks[n]))
+    responses = eng.run_all()
+    assert len(responses) == 4
+    assert eng.multi_plan is not None and eng.multi_plan.fits_budget()
+    assert eng.peak_memory() <= budget
+    assert eng.cache_hit_rate() > 0.0           # round 2 hits the pool
+    for r in responses:
+        assert r.peak_bytes <= budget
+        assert np.array_equal(np.asarray(r.result), refs[r.model]), r.model
+
+
+def test_streaming_executor_with_cache_bit_for_bit(setup):
+    """A streaming run through a private pool reproduces the preload
+    output exactly, and repeated runs hit device-resident weights."""
+    ma, _, toks, refs = setup
+    graph = ma.graph
+    hw = HWSpec(peak_flops=5e10, hbm_bw=2e10, stream_bw=1e10)
+    prob = OPGProblem(graph, CHUNK, m_peak=8 << 20,
+                      capacity=capacities(graph, CHUNK, hw))
+    plan = OverlapPlan.from_solution(prob, solve(prob))
+    total = sum(a.nbytes for a in ma.host_weights.values())
+    cache = WeightCache(budget_bytes=2 * total)     # fits whole model
+    s1 = StreamingExecutor(ma, plan, cache=cache, cache_key="a").run(toks["a"])
+    s2 = StreamingExecutor(ma, plan, cache=cache, cache_key="a").run(toks["a"])
+    assert np.array_equal(np.asarray(s1.result), refs["a"])
+    assert np.array_equal(np.asarray(s2.result), refs["a"])
+    assert s1.cache_hits == 0
+    assert s2.cache_misses == 0 and s2.cache_hits > 0
+    assert s2.cache_hit_rate == 1.0
+    assert cache.used_bytes() <= cache.budget_bytes
+
+
+def test_preload_executor_shares_pool(setup):
+    """PreloadExecutor checks weights into the same pool; a following
+    streaming run of the same model hits them."""
+    ma, _, toks, refs = setup
+    total = sum(a.nbytes for a in ma.host_weights.values())
+    cache = WeightCache(budget_bytes=2 * total)
+    p1 = PreloadExecutor(ma, cache=cache, cache_key="a").run(toks["a"])
+    p2 = PreloadExecutor(ma, cache=cache, cache_key="a").run(toks["a"])
+    assert p1.cache_hits == 0 and p2.cache_hit_rate == 1.0
+    assert np.array_equal(np.asarray(p2.result), refs["a"])
+    hw = HWSpec(peak_flops=5e10, hbm_bw=2e10, stream_bw=1e10)
+    prob = OPGProblem(ma.graph, CHUNK, m_peak=8 << 20,
+                      capacity=capacities(ma.graph, CHUNK, hw))
+    plan = OverlapPlan.from_solution(prob, solve(prob))
+    st = StreamingExecutor(ma, plan, cache=cache, cache_key="a").run(toks["a"])
+    assert st.cache_misses == 0
+    assert np.array_equal(np.asarray(st.result), refs["a"])
+
+
+def test_engine_interleaves_across_models(setup):
+    ma, mb, toks, _ = setup
+    eng = _engine("stream", 32 << 20)
+    eng.register("a", ma)
+    eng.register("b", mb)
+    for n in ("a", "a", "b", "b"):
+        eng.submit(Request(model=n, tokens=toks[n]))
+    ordered = eng._schedule()
+    assert [r.model for r in ordered] == ["a", "b", "a", "b"]
+    eng2 = _engine("stream", 32 << 20, interleave=False)
+    eng2.register("a", ma)
+    eng2.register("b", mb)
+    for n in ("a", "a", "b", "b"):
+        eng2.submit(Request(model=n, tokens=toks[n]))
+    assert [r.model for r in eng2._schedule()] == ["a", "a", "b", "b"]
+
+
+def test_engine_reports_per_model_memory_and_hit_rate(setup):
+    ma, mb, toks, refs = setup
+    combined = sum(a.nbytes for a in ma.host_weights.values()) \
+        + sum(a.nbytes for a in mb.host_weights.values())
+    eng = _engine("stream", int(0.6 * combined))
+    eng.register("a", ma)
+    eng.register("b", mb)
+    for _ in range(2):
+        for n in ("a", "b"):
+            eng.submit(Request(model=n, tokens=toks[n]))
+    eng.run_all()
+    rep = eng.model_report()
+    assert set(rep) == {"a", "b"}
+    for name, r in rep.items():
+        assert r.requests == 2
+        assert 0 < r.peak_bytes <= eng.budget_bytes
+        assert 0 < r.avg_bytes <= r.peak_bytes
+        assert 0.0 <= r.cache_hit_rate <= 1.0
+    assert 0.0 <= eng.cache_hit_rate() <= 1.0
+
+
+def test_engine_preload_policy_with_pool(setup):
+    """Preload policy through the shared pool: outputs exact, repeat
+    requests hit resident weights when the pool fits both models."""
+    ma, mb, toks, refs = setup
+    combined = sum(a.nbytes for a in ma.host_weights.values()) \
+        + sum(a.nbytes for a in mb.host_weights.values())
+    eng = _engine("preload", 2 * combined)
+    eng.register("a", ma)
+    eng.register("b", mb)
+    for _ in range(2):
+        for n in ("a", "b"):
+            eng.submit(Request(model=n, tokens=toks[n]))
+    responses = eng.run_all()
+    for r in responses:
+        assert np.array_equal(np.asarray(r.result), refs[r.model])
+    round2 = responses[2:]
+    assert all(r.cache_hit_rate == 1.0 for r in round2)
+
+
+def test_engine_without_budget_matches_legacy_behavior(setup):
+    """No budget -> no pool: streaming still beats preload on peak/avg
+    (the seed engine semantics, kept for single-model workloads)."""
+    ma, mb, toks, _ = setup
+    results = {}
+    for policy in ("stream", "preload"):
+        eng = ServingEngine(policy=policy, chunk_bytes=CHUNK,
+                            m_peak=8 << 20)
+        eng.register("a", ma)
+        eng.register("b", mb)
+        for n in ("a", "b"):
+            eng.submit(Request(model=n, tokens=toks[n]))
+        eng.run_all()                    # warm
+        eng.timeline.clear()
+        eng.stats_log.clear()
+        for n in ("a", "b"):
+            eng.submit(Request(model=n, tokens=toks[n]))
+        eng.run_all()
+        results[policy] = (eng.peak_memory(), eng.avg_memory())
+        assert eng.cache is None
+    assert results["stream"][0] < results["preload"][0]
+    assert results["stream"][1] < results["preload"][1]

@@ -95,7 +95,10 @@ def test_distributed_step_lowers_on_multidevice_mesh(kind):
     bundle = M.make_step_bundle(arch, shape, env)
     lowered = M.lower_step(bundle, env)
     compiled = lowered.compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # jax<0.5 returns one dict per program
+        ca = ca[0]
+    assert ca.get("flops", 0) > 0
 
 
 def test_decode_prefill_consistency():

@@ -1,0 +1,125 @@
+"""WeightCache invariants: LRU order, pinned protection, budget ceiling,
+hit-rate accounting (serving/weight_cache.py)."""
+import numpy as np
+import pytest
+
+from repro.serving.weight_cache import WeightCache
+
+KB = 1024
+
+
+def _arr(n_kb):
+    return np.zeros(n_kb * KB, np.uint8)
+
+
+def _put(c, model, w, n_kb=1, pin=False):
+    return c.put((model, w, "w"), _arr(n_kb), n_kb * KB, pin=pin)
+
+
+def test_lru_eviction_order():
+    c = WeightCache(budget_bytes=3 * KB)
+    for w in ("a", "b", "c"):
+        assert _put(c, "m", w)
+    c.touch(("m", "a", "w"))          # a becomes most-recent; b is now LRU
+    assert _put(c, "m", "d")
+    assert not c.contains(("m", "b", "w"))          # LRU victim
+    for w in ("a", "c", "d"):
+        assert c.contains(("m", w, "w")), w
+    assert c.stats.evictions == 1
+
+
+def test_eviction_walks_lru_until_fit():
+    c = WeightCache(budget_bytes=4 * KB)
+    for w in ("a", "b", "c", "d"):
+        assert _put(c, "m", w)
+    assert _put(c, "m", "big", n_kb=3)              # evicts a, b, c (oldest)
+    assert [k[1] for k in c.keys()] == ["d", "big"]
+
+
+def test_pinned_entries_survive_eviction_pressure():
+    c = WeightCache(budget_bytes=3 * KB)
+    assert _put(c, "m", "pinned", pin=True)
+    assert _put(c, "m", "lru1")
+    assert _put(c, "m", "lru2")
+    assert _put(c, "m", "new", n_kb=2)              # needs both unpinned slots
+    assert c.contains(("m", "pinned", "w"))
+    assert not c.contains(("m", "lru1", "w"))
+    assert not c.contains(("m", "lru2", "w"))
+    # release makes it evictable again
+    c.release(("m", "pinned", "w"))
+    assert _put(c, "m", "new2", n_kb=3)
+    assert not c.contains(("m", "pinned", "w"))
+
+
+def test_budget_never_exceeded():
+    c = WeightCache(budget_bytes=8 * KB)
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        n_kb = int(rng.integers(1, 4))
+        pin = bool(rng.integers(0, 2))
+        _put(c, f"m{i % 3}", f"w{i}", n_kb=n_kb, pin=pin)
+        if i % 7 == 0:                             # unpin a few at random
+            for k in c.keys()[: 2]:
+                c.release(k)
+        assert c.used_bytes() <= c.budget_bytes
+    assert c.used_bytes() <= c.budget_bytes
+
+
+def test_put_rejected_when_pinned_entries_block_fit():
+    c = WeightCache(budget_bytes=3 * KB)
+    assert _put(c, "m", "p1", n_kb=2, pin=True)
+    assert _put(c, "m", "p2", n_kb=1, pin=True)
+    assert not _put(c, "m", "x", n_kb=1)           # all bytes pinned
+    assert c.stats.rejected_puts == 1
+    assert c.used_bytes() == 3 * KB
+    # an entry larger than the whole budget is always rejected
+    assert not _put(c, "m", "huge", n_kb=4)
+
+
+def test_hit_rate_accounting_global_and_per_model():
+    c = WeightCache(budget_bytes=64 * KB)
+    assert c.acquire(("a", "w0", "w")) is None      # miss
+    _put(c, "a", "w0")
+    assert c.acquire(("a", "w0", "w")) is not None  # hit
+    assert c.acquire(("b", "w0", "w")) is None      # miss (model b)
+    assert c.stats.hits == 1 and c.stats.misses == 2
+    assert c.hit_rate() == pytest.approx(1 / 3)
+    assert c.model_stats("a").hits == 1
+    assert c.model_stats("a").misses == 1
+    assert c.model_stats("b").misses == 1
+    assert c.model_stats("a").hit_rate == pytest.approx(0.5)
+
+
+def test_acquire_pins_and_pin_existing_skips_accounting():
+    c = WeightCache(budget_bytes=2 * KB)
+    _put(c, "m", "a")
+    before = (c.stats.hits, c.stats.misses)
+    assert c.pin_existing(("m", "a", "w")) == KB
+    assert c.pin_existing(("m", "absent", "w")) is None
+    assert (c.stats.hits, c.stats.misses) == before
+    # pinned via pin_existing -> survives pressure
+    _put(c, "m", "b")
+    assert not _put(c, "m", "c", n_kb=2)            # a pinned, only b evictable
+    assert c.contains(("m", "a", "w"))
+
+
+def test_remove_ignores_pins_and_release_is_noop_on_absent():
+    c = WeightCache(budget_bytes=4 * KB)
+    _put(c, "m", "a", pin=True)
+    assert c.remove(("m", "a", "w"))
+    assert c.used_bytes() == 0
+    c.release(("m", "a", "w"))                      # consumed entry: no-op
+    assert not c.remove(("m", "a", "w"))
+
+
+def test_evict_model_drops_only_unpinned_entries_of_that_model():
+    c = WeightCache(budget_bytes=16 * KB)
+    _put(c, "a", "w0")
+    _put(c, "a", "w1", pin=True)
+    _put(c, "b", "w0")
+    freed = c.evict_model("a")
+    assert freed == KB
+    assert not c.contains(("a", "w0", "w"))
+    assert c.contains(("a", "w1", "w"))
+    assert c.contains(("b", "w0", "w"))
+    assert c.model_bytes("b") == KB
