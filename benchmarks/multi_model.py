@@ -20,9 +20,9 @@ def _build_models():
             for i, (n, cfg) in enumerate(variants().items())}
 
 
-def _run_policy(policy, budget_bytes, models):
+def _run_policy(policy, budget_bytes, models, eviction="lru"):
     engine = ServingEngine(policy=policy, m_peak=64 << 20, disk_bw=0.5e9,
-                           budget_bytes=budget_bytes)
+                           budget_bytes=budget_bytes, eviction=eviction)
     rng = np.random.default_rng(0)
     for n, m in models.items():
         engine.register(n, m)
@@ -46,11 +46,14 @@ def run():
     res = {}
     models = _build_models()
     budget = budget_for(models)
-    for policy in ("preload", "stream"):
-        engine, total, n = _run_policy(policy, budget, models)
-        res[policy] = (engine.peak_memory(), engine.avg_memory(), total)
+    for policy, eviction in (("preload", "lru"), ("stream", "lru"),
+                             ("stream", "cost")):
+        engine, total, n = _run_policy(policy, budget, models,
+                                       eviction=eviction)
+        label = policy if eviction == "lru" else f"{policy}-{eviction}"
+        res[label] = (engine.peak_memory(), engine.avg_memory(), total)
         rows.append(Row(
-            f"multi_model/{policy}", total / n * 1e6,
+            f"multi_model/{label}", total / n * 1e6,
             f"requests={n} total={total:.2f}s "
             f"peak={engine.peak_memory()/1e6:.0f}MB "
             f"avg={engine.avg_memory()/1e6:.0f}MB "
@@ -58,7 +61,7 @@ def run():
             f"budget={budget/1e6:.0f}MB"))
         for name, rep in sorted(engine.model_report().items()):
             rows.append(Row(
-                f"multi_model/{policy}/{name}", 0.0,
+                f"multi_model/{label}/{name}", 0.0,
                 f"peak={rep.peak_bytes/1e6:.0f}MB "
                 f"avg={rep.avg_bytes/1e6:.0f}MB "
                 f"hit_rate={rep.cache_hit_rate:.2f}"))

@@ -7,6 +7,7 @@ Mapping to the paper (DESIGN.md §7):
     Table 4  -> solver_runtime      Table 7 -> latency_e2e
     Table 8  -> memory_e2e          Fig 2/4 -> load_capacity
     Fig 6    -> multi_model         Fig 7   -> ablation
+    §4.4 online -> bursty_arrivals (scheduler × eviction A/B)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
 """
@@ -22,6 +23,7 @@ SUITES = [
     "latency_e2e",
     "memory_e2e",
     "multi_model",
+    "bursty_arrivals",
     "ablation",
     "tradeoff",
     "naive_overlap",

@@ -49,9 +49,9 @@ def budget_for(models):
     return int(0.35 * combined)
 
 
-def run(policy, budget_bytes, models):
+def run(policy, budget_bytes, models, eviction="lru"):
     engine = ServingEngine(policy=policy, m_peak=64 << 20, disk_bw=0.5e9,
-                           budget_bytes=budget_bytes)
+                           budget_bytes=budget_bytes, eviction=eviction)
     rng = np.random.default_rng(0)
     for n, m in models.items():
         engine.register(n, m)
@@ -92,6 +92,32 @@ def main():
                   f"avg {rep.avg_bytes/1e6:6.1f}MB "
                   f"hit rate {rep.cache_hit_rate:.2f}")
         print("memory timeline:", spark([m / 1e6 for m in mem]))
+
+    # --- online arrival-aware loop: a bursty trace on a virtual clock ----
+    from repro.serving.batcher import BatcherConfig
+    from repro.serving.clock import SimClock
+    from repro.serving.stream import RequestStream, bursty_trace
+
+    engine = ServingEngine(policy="stream", m_peak=64 << 20,
+                           budget_bytes=budget, eviction="cost")
+    for n, m in models.items():
+        engine.register(n, m)
+    trace = bursty_trace({"encoder": 3.0, "translator": 2.0}, 1.5,
+                         burst_model="detector", burst_at_s=0.6, burst_n=4,
+                         burst_span_s=0.2, vocab=GPTNEO_S.vocab, seq=SEQ,
+                         seed=3)
+    responses = engine.serve(RequestStream.from_trace(trace),
+                             clock=SimClock(exec_time=0.08),
+                             batcher=BatcherConfig(max_batch=4,
+                                                   max_wait_s=0.05))
+    lats = [r.latency_s for r in responses]
+    print(f"\nonline (bursty trace, virtual clock): {len(responses)} "
+          f"requests in {len(engine.batch_log)} batches  "
+          f"mean latency {np.mean(lats):.3f}s  "
+          f"pool hit rate {engine.cache_hit_rate():.2f}  eviction=cost")
+    for t, cur, target, spec in engine.prefetch_log:
+        print(f"  t={t:5.2f}s running {cur:10s} -> prefetch {target:10s}"
+              f"{'  (speculative)' if spec else ''}")
 
 
 if __name__ == "__main__":

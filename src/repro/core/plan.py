@@ -261,20 +261,36 @@ class MultiModelPlan:
                    - self.peaks.get(current, 0))
 
     def prefetch_schedule(self, name: str, weight_bytes: Dict[str, int],
-                          max_bytes: int):
+                          max_bytes: int,
+                          lookahead_ops: Optional[int] = None):
         """Earliest-scheduled loads of ``name`` fitting ``max_bytes``:
-        (whole preload weights, chunk tasks in plan op order)."""
+        (whole preload weights, chunk tasks in plan op order).
+
+        ``lookahead_ops`` bounds how deep into the plan the schedule
+        reaches: only the first ``lookahead_ops`` preload weights AND the
+        first ``lookahead_ops`` load-issuing ops are considered (None =
+        the whole plan) — bounding the chunk tasks alone would let a
+        preload-heavy plan still fill the entire budget. The arrival-aware
+        engine uses a shallow lookahead when warming a model whose request
+        has not arrived yet — speculative bytes shouldn't crowd out queued
+        work — and the full plan when requests are already waiting."""
         plan = self.plans[name]
         whole: List[str] = []
         chunks: List[LoadTask] = []
         used = 0
-        for w in plan.preload:
+        preload = list(plan.preload)
+        if lookahead_ops is not None:
+            preload = preload[: max(0, int(lookahead_ops))]
+        for w in preload:
             b = weight_bytes[w]
             if used + b > max_bytes:
                 continue           # oversized weight: skip, keep filling
             whole.append(w)
             used += b
-        for l in sorted(plan.loads):
+        load_ops = sorted(plan.loads)
+        if lookahead_ops is not None:
+            load_ops = load_ops[: max(0, int(lookahead_ops))]
+        for l in load_ops:
             for t in plan.loads[l]:
                 take = min(t.n_chunks,
                            max(0, (max_bytes - used) // plan.chunk_bytes))

@@ -207,6 +207,7 @@ class RunStats:
     residency: List[int] = field(default_factory=list)
     stall_events: int = 0
     model: str = ""
+    requests: int = 1            # user requests this run served (batch size)
     cache_hits: int = 0          # weight-pool probes served device-resident
     cache_misses: int = 0        # probes that had to stream from host/disk
     result: Any = None

@@ -1,11 +1,20 @@
-"""Multi-model FIFO serving driver (the paper's headline scenario).
+"""Multi-model serving driver (the paper's headline scenario).
+
+Batch (Fig 6) mode — drain a pre-filled FIFO mix:
 
     PYTHONPATH=src python -m repro.launch.serve \
         --models gptneo-s,gptneo-s --policy stream --requests 8
 
-Registers reduced GPT-Neo-family models with the ServingEngine, submits a
-FIFO request mix, and reports per-request latency plus the global memory
-timeline (Fig 6 analogue).
+Online mode — replay a Poisson arrival trace through the continuous
+arrival-aware loop (batcher coalescing + queue-depth/arrival-time-driven
+prefetch), with per-request arrival→completion latencies:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models gptneo-s,gptneo-s --online --rate 4 --duration 2 \
+        --budget-mb 256 --eviction cost
+
+``--eviction`` picks the shared pool's policy: ``lru`` or ``cost``
+(cheapest-to-restream first, à la Demand Layering).
 """
 from __future__ import annotations
 
@@ -16,7 +25,10 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.streaming import HostModel
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import SimClock
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.stream import RequestStream, poisson_trace
 
 
 def main(argv=None):
@@ -29,21 +41,59 @@ def main(argv=None):
     ap.add_argument("--disk-gbps", type=float, default=0.5)
     ap.add_argument("--budget-mb", type=int, default=0,
                     help="shared device pool budget (0 = no shared cache)")
+    ap.add_argument("--eviction", choices=["lru", "cost"], default="lru",
+                    help="pool eviction policy (cost = cheapest-to-restream)")
     ap.add_argument("--layers", type=int, default=0,
                     help="override layer count (reduced models)")
+    ap.add_argument("--online", action="store_true",
+                    help="serve a Poisson arrival trace via the online loop")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="online: per-model arrival rate (req/s, virtual)")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="online: trace duration (virtual seconds)")
+    ap.add_argument("--scheduler", choices=["arrival", "static"],
+                    default="arrival", help="online: run/prefetch picking")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
     args = ap.parse_args(argv)
 
     names = args.models.split(",")
     engine = ServingEngine(policy=args.policy,
                            m_peak=args.m_peak_mb << 20,
                            disk_bw=args.disk_gbps * 1e9,
-                           budget_bytes=(args.budget_mb << 20) or None)
+                           budget_bytes=(args.budget_mb << 20) or None,
+                           eviction=args.eviction)
     rng = np.random.default_rng(0)
     for i, n in enumerate(names):
         cfg = get_arch(n).model
         if args.layers:
             cfg = replace(cfg, num_layers=args.layers)
         engine.register(f"{n}#{i}", HostModel.build(cfg, seq=args.seq, seed=i))
+
+    if args.online:
+        vocab = min(m.cfg.vocab for m in engine.models.values())
+        trace = poisson_trace({n: args.rate for n in engine.models},
+                              args.duration, vocab=vocab, seq=args.seq,
+                              seed=0)
+        # virtual arrival timeline + measured real execution charges
+        clock = SimClock()
+        responses = engine.serve(
+            RequestStream.from_trace(trace), clock=clock,
+            scheduler=args.scheduler,
+            batcher=BatcherConfig(max_batch=args.max_batch,
+                                  max_wait_s=args.max_wait_ms / 1e3))
+        for r in responses:
+            print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "
+                  f"queue {r.queue_s:6.3f}s latency {r.latency_s:6.3f}s "
+                  f"batch={r.batch_size}")
+        lats = [r.latency_s for r in responses]
+        print(f"ONLINE {len(responses)} requests "
+              f"({len(engine.batch_log)} batches) "
+              f"mean latency {np.mean(lats):.3f}s "
+              f"p95 {np.percentile(lats, 95):.3f}s "
+              f"pool hit rate {engine.cache_hit_rate():.2f} "
+              f"scheduler={args.scheduler} eviction={args.eviction}")
+        return responses, engine
 
     keys = list(engine.models)
     for r in range(args.requests):

@@ -1,17 +1,24 @@
 """Request batcher: groups same-model FIFO requests into padded batches up
-to `max_batch`/`max_wait_s` — standard serving-front logic, kept separate
-from the engine so the FIFO semantics of the paper's evaluation stay pure
+to `max_batch`/`max_wait_s` — the serving front the online loop
+(``ServingEngine.serve``) coalesces traffic through. Kept separate from
+the engine so the FIFO semantics of the paper's evaluation stay pure
 (batch size 1) unless explicitly enabled.
+
+``make_batch`` pads a same-model group to the max sequence length and
+records each member's row span + true length; ``split_batch_result``
+inverts it, slicing the batched output back to per-request results.
+Causal attention + per-position norms make the padded prefix rows
+bit-for-bit equal to a solo run, so de-batched streamed outputs still
+compare exactly against per-request preload references.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import List
+from dataclasses import dataclass, field
+from typing import List, Tuple
 
 import numpy as np
 
-from repro.serving.engine import Request
+from repro.serving.types import Request
 
 
 @dataclass
@@ -21,30 +28,90 @@ class BatcherConfig:
     pad_id: int = 0
 
 
-def batch_requests(reqs: List[Request], cfg: BatcherConfig) -> List[Request]:
-    """Coalesce consecutive same-model requests (FIFO order preserved)."""
-    out: List[Request] = []
+@dataclass
+class Batch:
+    """A coalesced same-model group + the bookkeeping to un-coalesce it."""
+    model: str
+    tokens: np.ndarray
+    requests: List[Request] = field(default_factory=list)
+    row_spans: List[Tuple[int, int]] = field(default_factory=list)
+    seq_lens: List[int] = field(default_factory=list)
+
+    @property
+    def arrival_s(self) -> float:
+        return self.requests[0].arrival_s if self.requests else 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+
+def make_batch(group: List[Request], cfg: BatcherConfig) -> Batch:
+    """Pad a same-model FIFO group to one (sum_b, max_s) token batch."""
+    assert group, "empty batch group"
+    assert len({r.model for r in group}) == 1, "cross-model batch"
+    s = max(r.tokens.shape[1] for r in group)
+    toks = np.full((sum(r.tokens.shape[0] for r in group), s),
+                   cfg.pad_id, np.int32)
+    batch = Batch(model=group[0].model, tokens=toks, requests=list(group))
+    row = 0
+    for r in group:
+        b, sl = r.tokens.shape
+        toks[row: row + b, :sl] = r.tokens
+        batch.row_spans.append((row, row + b))
+        batch.seq_lens.append(sl)
+        row += b
+    return batch
+
+
+def split_batch_result(batch: Batch, result) -> List[np.ndarray]:
+    """De-batch a (batch, seq, ...) output back to per-request slices,
+    dropping each member's padded tail — the round-trip inverse of
+    ``make_batch``."""
+    arr = np.asarray(result)
+    out = []
+    for (lo, hi), sl in zip(batch.row_spans, batch.seq_lens):
+        out.append(arr[lo:hi, :sl])
+    return out
+
+
+def can_join(head: Request, candidate: Request, group_size: int,
+             cfg: BatcherConfig) -> bool:
+    """THE grouping rule, in one place (the engine's online loop and the
+    legacy list batcher both delegate here): same model as the group head,
+    within ``max_wait_s`` of the head's arrival, group below ``max_batch``."""
+    return (candidate.model == head.model
+            and group_size < cfg.max_batch
+            and candidate.arrival_s - head.arrival_s <= cfg.max_wait_s)
+
+
+def group_requests(reqs: List[Request], cfg: BatcherConfig) -> List[List[Request]]:
+    """Split a FIFO request list into coalescible groups (``can_join``
+    applied to consecutive requests). Cross-model requests never share a
+    group and per-model FIFO order is preserved."""
+    groups: List[List[Request]] = []
     i = 0
     while i < len(reqs):
         j = i + 1
         group = [reqs[i]]
-        while (j < len(reqs) and reqs[j].model == reqs[i].model
-               and len(group) < cfg.max_batch
-               and reqs[j].arrival_s - reqs[i].arrival_s <= cfg.max_wait_s):
+        while j < len(reqs) and can_join(reqs[i], reqs[j], len(group), cfg):
             group.append(reqs[j])
             j += 1
-        if len(group) == 1:
-            out.append(reqs[i])
-        else:
-            s = max(r.tokens.shape[1] for r in group)
-            toks = np.full((sum(r.tokens.shape[0] for r in group), s),
-                           cfg.pad_id, np.int32)
-            row = 0
-            for r in group:
-                b, sl = r.tokens.shape
-                toks[row: row + b, :sl] = r.tokens
-                row += b
-            out.append(Request(model=group[0].model, tokens=toks,
-                               arrival_s=group[0].arrival_s))
+        groups.append(group)
         i = j
+    return groups
+
+
+def batch_requests(reqs: List[Request], cfg: BatcherConfig) -> List[Request]:
+    """Coalesce consecutive same-model requests (FIFO order preserved) into
+    padded ``Request``s — the legacy list-in/list-out front used when the
+    caller does not need de-batching."""
+    out: List[Request] = []
+    for group in group_requests(reqs, cfg):
+        if len(group) == 1:
+            out.append(group[0])
+        else:
+            b = make_batch(group, cfg)
+            out.append(Request(model=b.model, tokens=b.tokens,
+                               arrival_s=b.arrival_s))
     return out

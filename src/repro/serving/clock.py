@@ -1,0 +1,72 @@
+"""Injectable clocks for the online serving loop.
+
+The engine's ``serve()`` never calls ``time`` directly — every timestamp,
+idle wait, and execution charge goes through one of these, so the whole
+arrival-aware loop is deterministically testable (and trace-replayable in
+benchmarks) without real sleeps.
+
+  * ``MonotonicClock`` — production: ``time.perf_counter`` + ``time.sleep``;
+    execution advances wall time by itself, so ``tick`` is a no-op.
+  * ``SimClock`` — virtual time. ``sleep`` advances the virtual clock
+    instantly; ``tick(real_dt, model)`` charges execution time: the
+    measured real duration by default, or a fixed/per-model override
+    (``exec_time``) so scheduling tests are bit-reproducible regardless of
+    host speed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Union
+
+
+class MonotonicClock:
+    """Real time. ``tick`` is a no-op: execution already advanced it."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def sleep(self, dt: float):
+        if dt > 0:
+            time.sleep(dt)
+
+    def tick(self, real_dt: float, model: str = "") -> float:
+        return real_dt
+
+
+class SimClock:
+    """Deterministic virtual clock.
+
+    ``exec_time`` controls what ``tick`` charges per executed batch:
+      * None      — charge the measured real duration (realistic latencies
+                    on a virtual arrival timeline);
+      * float     — fixed virtual seconds per batch (fully deterministic);
+      * callable  — ``f(model_name) -> seconds`` for skewed per-model rates.
+    """
+
+    def __init__(self, start: float = 0.0,
+                 exec_time: Union[None, float,
+                                  Callable[[str], float]] = None):
+        self._t = float(start)
+        self.exec_time = exec_time
+        self.slept_s = 0.0           # total idle time the loop waited out
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, dt: float):
+        if dt > 0:
+            self._t += dt
+            self.slept_s += dt
+
+    def advance(self, dt: float):
+        self._t += max(0.0, dt)
+
+    def tick(self, real_dt: float, model: str = "") -> float:
+        if self.exec_time is None:
+            dt = real_dt
+        elif callable(self.exec_time):
+            dt = float(self.exec_time(model))
+        else:
+            dt = float(self.exec_time)
+        self._t += max(0.0, dt)
+        return dt

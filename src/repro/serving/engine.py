@@ -1,24 +1,44 @@
 """Multi-DNN streaming serving engine (paper §2.2 / §4.4, Fig 6).
 
-Models are registered with the engine; requests queue per model and are
-*interleaved* round-robin across models (per-model FIFO preserved). All
-executors share one budgeted ``WeightCache`` — the device-memory pool —
-and the engine plans every registered model jointly via
-``plan_multi_model`` so each model's execution peak fits the pool budget.
+Models are registered with the engine; all executors share one budgeted
+``WeightCache`` — the device-memory pool — and the engine plans every
+registered model jointly via ``plan_multi_model`` so each model's
+execution peak fits the pool budget.
 
-While request *k* executes, the engine overlaps request *k+1*'s model:
+Two entry points:
+
+  * ``run_all()`` — drain a pre-filled queue with a static round-robin
+    interleave (per-model FIFO preserved): the paper's Fig 6 batch mode.
+  * ``serve(stream)`` — the continuous, arrival-aware online loop: pulls
+    from a live ``RequestStream``, coalesces same-model arrivals through
+    ``serving/batcher.py`` (responses are de-batched back to per-request
+    latencies), and picks the *next model to run* — and the next model to
+    PREFETCH — from actual queue depths and arrival times instead of the
+    static interleave order. Every timestamp goes through an injectable
+    clock (``serving/clock.py``), so the whole loop is deterministically
+    testable with ``SimClock`` — no real sleeps in tests.
+
+While one request (or batch) executes, the engine overlaps the predicted
+next model:
 
   * plan-aware protection — cached entries the next model's OverlapPlan
     schedules earliest are PINNED, so the current model's streaming
     pressure recycles its own bytes instead of evicting exactly what the
-    schedule needs next (a shared LRU pool thrashes on sequential weight
+    schedule needs next (a shared pool thrashes on sequential weight
     scans without this);
   * prefetch — within the headroom ``budget - peak(current)``, the next
     model's preload weights and earliest-scheduled chunks are loaded into
     the pool by a background thread (the cross-model analogue of the
-    paper's intra-model compute/load overlap).
+    paper's intra-model compute/load overlap). When the predicted model's
+    request has not arrived yet (speculative warm from the trace's
+    upcoming arrivals), the prefetch uses a shallow plan lookahead so
+    speculative bytes do not crowd out queued work.
 
-Two policies:
+Pool eviction is pluggable (``eviction="lru" | "cost"``): LRU, or
+cheapest-to-restream-first (restream bytes / disk bandwidth, à la Demand
+Layering) — threaded through to ``WeightCache``.
+
+Two execution policies:
   * "stream"  — FlashMem: per-model OverlapPlans, chunks checked in/out of
     the shared pool, freed at last use.
   * "preload" — each request loads its full model then runs (MNN-style);
@@ -33,8 +53,9 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -45,33 +66,19 @@ from repro.core.plan import MultiModelPlan, OverlapPlan, plan_multi_model
 from repro.core.solver import SolverConfig, solve
 from repro.core.streaming import (HostModel, PreloadExecutor, RunStats,
                                   StreamingExecutor, chunk_rows)
+from repro.serving.batcher import (BatcherConfig, can_join, make_batch,
+                                   split_batch_result)
+from repro.serving.clock import MonotonicClock
+from repro.serving.stream import RequestStream
+from repro.serving.types import Request, Response
 from repro.serving.weight_cache import WeightCache
 
-
-@dataclass
-class Request:
-    model: str
-    tokens: np.ndarray
-    arrival_s: float = field(default_factory=time.perf_counter)
-
-
-@dataclass
-class Response:
-    model: str
-    latency_s: float
-    init_s: float
-    exec_s: float
-    peak_bytes: int
-    avg_bytes: float = 0.0
-    cache_hits: int = 0
-    cache_misses: int = 0
-    cache_hit_rate: float = 0.0
-    result: object = None
+__all__ = ["Request", "Response", "ModelReport", "ServingEngine"]
 
 
 @dataclass
 class ModelReport:
-    """Per-model aggregate over a run_all batch."""
+    """Per-model aggregate over a run_all/serve history."""
     requests: int = 0
     peak_bytes: int = 0
     avg_bytes: float = 0.0
@@ -91,7 +98,8 @@ class ServingEngine:
                  solver_cfg: Optional[SolverConfig] = None,
                  budget_bytes: Optional[int] = None,
                  prefetch: bool = True,
-                 interleave: Optional[bool] = None):
+                 interleave: Optional[bool] = None,
+                 eviction: str = "lru"):
         assert policy in ("stream", "preload")
         self.policy = policy
         self.chunk_bytes = chunk_bytes
@@ -100,7 +108,9 @@ class ServingEngine:
         self.disk_bw = disk_bw
         self.solver_cfg = solver_cfg
         self.budget_bytes = budget_bytes
-        self.cache = WeightCache(budget_bytes) if budget_bytes else None
+        self.eviction = eviction
+        self.cache = WeightCache(budget_bytes, policy=eviction,
+                                 disk_bw=disk_bw) if budget_bytes else None
         self.prefetch = prefetch and self.cache is not None
         # default: interleave only with a shared pool; cache-less mode keeps
         # the seed engine's global-FIFO response order (callers pair
@@ -113,6 +123,12 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.timeline: List[tuple] = []       # (t, resident_bytes, model)
         self.stats_log: List[RunStats] = []
+        # online-loop observability (serve()): every prefetch decision,
+        # idle wait, and executed batch — what the scenario tests assert on
+        self.prefetch_log: List[tuple] = []   # (t, current, target, specul.)
+        self.idle_log: List[tuple] = []       # (t, next_arrival)
+        self.batch_log: List[tuple] = []      # (t, model, batch_size)
+        self.rejected: List[Request] = []     # arrivals for unknown models
         self._executors: Dict[str, object] = {}
         self._protected: Dict[str, List[tuple]] = {}
         self._planned = False
@@ -177,19 +193,97 @@ class ServingEngine:
                     out.append(per_model[name].pop(0))
         return out
 
+    # -- arrival-aware scheduling (serve) ----------------------------------
+    def _rr_distance(self, name: str, last: Optional[str]) -> int:
+        """Cyclic registration-order distance after `last` — the round-robin
+        tie-break that keeps equal-arrival models rotating fairly."""
+        order = list(self.models)
+        if name not in order:
+            return 0
+        if last is None or last not in order:
+            return order.index(name)
+        return (order.index(name) - order.index(last) - 1) % len(order)
+
+    def _pick_next_model(self, pending: Dict[str, Deque[Request]],
+                         last: Optional[str],
+                         scheduler: str = "arrival") -> Optional[str]:
+        """Next model to RUN.
+
+        * "arrival" — the model whose head request has waited longest
+          (earliest arrival = global cross-model FIFO, which is starvation-
+          free under skewed rates); ties rotate round-robin after `last`.
+        * "static" — the pre-PR interleave: rotate registration order after
+          `last`, first non-empty queue wins, arrival times ignored."""
+        names = [n for n, q in pending.items() if q]
+        if not names:
+            return None
+        if scheduler == "static":
+            return min(names, key=lambda n: self._rr_distance(n, last))
+        return min(names, key=lambda n: (pending[n][0].arrival_s,
+                                         self._rr_distance(n, last)))
+
+    def _pick_prefetch_target(self, pending: Dict[str, Deque[Request]],
+                              stream: Optional[RequestStream],
+                              current: str,
+                              scheduler: str = "arrival"
+                              ) -> Tuple[Optional[str], bool]:
+        """Next model to PREFETCH while `current` executes.
+
+        * "arrival" — from actual queue state: the queued model whose head
+          has waited longest (depth breaks ties — a deeper queue is the
+          likelier next run under batching). With no other queue non-empty,
+          fall back to the trace's upcoming arrivals (speculative warm;
+          shallow lookahead).
+        * "static" — next non-empty queue in registration rotation after
+          `current`, blind to arrivals and depths (the pre-PR keying that
+          bursty traffic invalidates)."""
+        cands = [n for n, q in pending.items() if q and n != current]
+        if cands:
+            if scheduler == "static":
+                return min(cands,
+                           key=lambda n: self._rr_distance(n, current)), False
+            return min(cands, key=lambda n: (pending[n][0].arrival_s,
+                                             -len(pending[n]))), False
+        if scheduler == "arrival" and stream is not None:
+            for r in stream.peek_upcoming():
+                if r.model != current and r.model in self.models:
+                    return r.model, True
+        return None, False
+
+    def _take_group(self, q: Deque[Request],
+                    cfg: Optional[BatcherConfig]) -> List[Request]:
+        """Pop the head plus any already-arrived requests the batcher's
+        grouping rule admits (per-model FIFO preserved)."""
+        group = [q.popleft()]
+        if cfg is None:
+            return group
+        while q and can_join(group[0], q[0], len(group), cfg):
+            group.append(q.popleft())
+        return group
+
     # -- cross-model overlap ----------------------------------------------
     def _peak_estimate(self, name: str) -> int:
         if self.multi_plan is not None and name in self.multi_plan.peaks:
             return self.multi_plan.peaks[name]
         return sum(a.nbytes for a in self.models[name].host_weights.values())
 
+    def _prefetch_limit(self, current: str) -> int:
+        if self.multi_plan is not None:
+            return self.multi_plan.prefetch_budget(current, reserve=0.1)
+        # preload policy: no plan, size from model bytes
+        return max(0, int(0.9 * self.budget_bytes)
+                   - self._peak_estimate(current))
+
     def _protect_and_prefetch(self, name: str, limit: int,
-                              stop: threading.Event):
+                              stop: threading.Event,
+                              lookahead_ops: Optional[int] = None):
         """Pin the next model's earliest-scheduled resident entries and
         stream its missing ones into the pool, spending at most `limit`
         bytes of pinned+prefetched residency. Runs on a background thread
         while the current model computes; `stop` is set when that model
-        finishes so the thread winds down before pins are released."""
+        finishes so the thread winds down before pins are released.
+        `lookahead_ops` bounds how deep into the plan the prefetch reaches
+        (speculative warms stay shallow)."""
         cache, model = self.cache, self.models[name]
         pinned = self._protected.setdefault(name, [])
         used = 0
@@ -212,7 +306,7 @@ class ServingEngine:
                 return False
             if self.disk_bw > 0:
                 # simulated storage stage, interruptible: a set stop flag
-                # must not leave run_all joining through a long sleep
+                # must not leave the join through a long sleep
                 if stop.wait(timeout=nbytes_if_load / self.disk_bw):
                     return False
             if stop.is_set():
@@ -229,7 +323,8 @@ class ServingEngine:
             sizes = {w: model.host_weights[w].nbytes
                      for w in model.graph.weights}
             whole, chunks = self.multi_plan.prefetch_schedule(
-                name, sizes, limit) if self.multi_plan is not None \
+                name, sizes, limit, lookahead_ops=lookahead_ops) \
+                if self.multi_plan is not None \
                 else (list(plan.preload), [])
             for w in whole:
                 if not hold((name, w, "w"), sizes[w], model.host_weights[w]):
@@ -246,6 +341,8 @@ class ServingEngine:
                 for ci in range(t.chunk_lo, min(t.chunk_hi, len(hcs))):
                     if not hold((name, t.weight, ci), hcs[ci].nbytes, hcs[ci]):
                         return
+            if lookahead_ops is not None:
+                return        # speculative warm: stop at the lookahead edge
             # protect the remainder of what's already resident, in op order
             for w in model.graph.weights:
                 if used >= limit or stop.is_set():
@@ -256,6 +353,25 @@ class ServingEngine:
                 if not hold((name, w, "w"), model.host_weights[w].nbytes,
                             model.host_weights[w]):
                     return
+
+    def _start_prefetch(self, target: str, current: str,
+                        lookahead_ops: Optional[int] = None):
+        limit = self._prefetch_limit(current)
+        stop = threading.Event()
+        th = threading.Thread(target=self._protect_and_prefetch,
+                              args=(target, limit, stop, lookahead_ops),
+                              daemon=True)
+        th.start()
+        return th, stop
+
+    def _stop_prefetch(self, th: Optional[threading.Thread],
+                       stop: Optional[threading.Event]):
+        if th is not None:
+            # the stop flag bounds the join: the thread checks it before
+            # every hold, so no pin can be appended after this returns
+            # and _release_protection cannot orphan a live pin list
+            stop.set()
+            th.join()
 
     def _release_protection(self, name: str):
         for key in self._protected.pop(name, []):
@@ -273,27 +389,13 @@ class ServingEngine:
             nxt = ordered[i + 1] if i + 1 < len(ordered) else None
             if (self.prefetch and nxt is not None
                     and nxt.model != req.model):
-                if self.multi_plan is not None:
-                    limit = self.multi_plan.prefetch_budget(req.model,
-                                                            reserve=0.1)
-                else:       # preload policy: no plan, size from model bytes
-                    limit = max(0, int(0.9 * self.budget_bytes)
-                                - self._peak_estimate(req.model))
-                pf_stop = threading.Event()
-                prefetcher = threading.Thread(
-                    target=self._protect_and_prefetch,
-                    args=(nxt.model, limit, pf_stop), daemon=True)
-                prefetcher.start()
+                prefetcher, pf_stop = self._start_prefetch(nxt.model,
+                                                           req.model)
             t0 = time.perf_counter()
             stats = self._executor(req.model).run(req.tokens)
             dt = time.perf_counter() - t0
-            if prefetcher is not None:
-                # the stop flag bounds the join: the thread checks it before
-                # every hold, so no pin can be appended after this returns
-                # and _release_protection cannot orphan a live pin list
-                pf_stop.set()
-                prefetcher.join()
-                prefetcher, pf_stop = None, None
+            self._stop_prefetch(prefetcher, pf_stop)
+            prefetcher, pf_stop = None, None
             self._release_protection(req.model)
             result, stats.result = stats.result, None   # keep the log light:
             self.stats_log.append(stats)                # the tensor goes to
@@ -307,7 +409,100 @@ class ServingEngine:
                 req.model, dt, stats.init_s, stats.exec_s, stats.peak_bytes,
                 avg_bytes=stats.avg_bytes, cache_hits=stats.cache_hits,
                 cache_misses=stats.cache_misses,
-                cache_hit_rate=stats.cache_hit_rate, result=result))
+                cache_hit_rate=stats.cache_hit_rate, result=result,
+                arrival_s=req.arrival_s))
+        return out
+
+    def serve(self, stream: RequestStream, *,
+              clock=None, batcher: Optional[BatcherConfig] = None,
+              scheduler: str = "arrival",
+              poll_interval_s: float = 0.001,
+              speculative_lookahead_ops: int = 8) -> List[Response]:
+        """Continuous arrival-aware loop: serve a live ``RequestStream``
+        until it is closed and drained. Same-model arrivals inside the
+        batcher window coalesce into one padded execution; responses are
+        de-batched back to per-request latencies (arrival → completion).
+
+        ``clock`` is the injectable time source (default: real time). With
+        a ``SimClock`` and a trace stream the loop — including every
+        prefetch decision in ``prefetch_log`` — is fully deterministic.
+        ``scheduler`` selects run/prefetch-target picking: "arrival"
+        (queue-depth + arrival-time aware) or "static" (the pre-PR
+        registration-order interleave, kept for A/B benchmarking)."""
+        assert scheduler in ("arrival", "static"), scheduler
+        self._ensure_planned()
+        clock = clock or MonotonicClock()
+        pending: Dict[str, Deque[Request]] = {n: deque() for n in self.models}
+        out: List[Response] = []
+        last: Optional[str] = None
+        while True:
+            now = clock.now()
+            for r in stream.poll(now):
+                if r.model not in self.models:
+                    # never let one bad request crash the loop and strand
+                    # everything queued behind it
+                    self.rejected.append(r)
+                    continue
+                pending.setdefault(r.model, deque()).append(r)
+            if not any(pending.values()):
+                if stream.exhausted:
+                    break
+                nxt_arrival = stream.next_arrival()
+                if nxt_arrival is not None:
+                    self.idle_log.append((now, nxt_arrival))
+                    gap = max(0.0, nxt_arrival - now)
+                    # a live producer may push an earlier request at any
+                    # moment: only a closed stream earns the full sleep
+                    clock.sleep(gap if stream.closed
+                                else min(gap, poll_interval_s))
+                elif stream.closed:
+                    break
+                else:                       # live stream, nothing queued yet
+                    self.idle_log.append((now, None))
+                    clock.sleep(poll_interval_s)
+                continue
+            name = self._pick_next_model(pending, last, scheduler)
+            group = self._take_group(pending[name], batcher)
+            batch = make_batch(group, batcher or BatcherConfig())
+            prefetcher = pf_stop = None
+            target, speculative = self._pick_prefetch_target(
+                pending, stream, name, scheduler)
+            if self.prefetch and target is not None and target != name:
+                self.prefetch_log.append((now, name, target, speculative))
+                prefetcher, pf_stop = self._start_prefetch(
+                    target, name,
+                    lookahead_ops=speculative_lookahead_ops if speculative
+                    else None)
+            t0 = clock.now()
+            self.batch_log.append((t0, name, batch.size))
+            t0_real = time.perf_counter()
+            stats = self._executor(name).run(batch.tokens)
+            real_dt = time.perf_counter() - t0_real
+            clock.tick(real_dt, name)
+            dt = clock.now() - t0
+            self._stop_prefetch(prefetcher, pf_stop)
+            self._release_protection(name)
+            result, stats.result = stats.result, None
+            stats.requests = batch.size     # model_report counts requests,
+            self.stats_log.append(stats)    # not executed batches
+            n = max(len(stats.residency), 1)
+            for j, r in enumerate(stats.residency):
+                self.timeline.append((t0 + dt * (j + 1) / n, r, name))
+            finish = clock.now()
+            for req, res in zip(batch.requests,
+                                split_batch_result(batch, result)
+                                if result is not None
+                                else [None] * batch.size):
+                out.append(Response(
+                    name, finish - req.arrival_s, stats.init_s, stats.exec_s,
+                    stats.peak_bytes, avg_bytes=stats.avg_bytes,
+                    cache_hits=stats.cache_hits,
+                    cache_misses=stats.cache_misses,
+                    cache_hit_rate=stats.cache_hit_rate, result=res,
+                    arrival_s=req.arrival_s,
+                    queue_s=max(0.0, t0 - req.arrival_s),
+                    batch_size=batch.size))
+            last = name
         return out
 
     # -- metrics -----------------------------------------------------------
@@ -328,9 +523,10 @@ class ServingEngine:
         rep: Dict[str, ModelReport] = {}
         for s in self.stats_log:
             r = rep.setdefault(s.model, ModelReport())
-            r.requests += 1
+            k = max(getattr(s, "requests", 1), 1)   # serve(): batch of k
+            r.requests += k                         # counts user requests
             r.peak_bytes = max(r.peak_bytes, s.peak_bytes)
-            r.avg_bytes += (s.avg_bytes - r.avg_bytes) / r.requests
+            r.avg_bytes += (s.avg_bytes - r.avg_bytes) * k / r.requests
             r.cache_hits += s.cache_hits
             r.cache_misses += s.cache_misses
         return rep

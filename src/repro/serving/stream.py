@@ -1,0 +1,129 @@
+"""Live request streams + arrival-trace generators for the online loop.
+
+``RequestStream`` is the engine's pull interface: producers ``push``
+requests (each stamped with an ``arrival_s`` on the serving clock's
+timeline) and ``serve()`` polls for everything that has *arrived* by the
+current clock reading. A pre-filled, closed stream replays a trace
+deterministically — the benchmark/test mode; a live stream is the same
+object with concurrent pushers.
+
+``peek_upcoming`` exposes not-yet-arrived requests (known only for trace
+replays). The engine uses it purely as a prefetch *hint* — to warm the
+model of the next future arrival when every queue is empty — never for
+scheduling decisions about arrived work.
+
+Trace generators (``poisson_trace``, ``bursty_trace``) are seeded and
+shared by tests and ``benchmarks/bursty_arrivals.py`` so both replay the
+exact same workloads.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.types import Request
+
+
+class RequestStream:
+    """Arrival-ordered request source (thread-safe heap on ``arrival_s``)."""
+
+    def __init__(self, requests: Sequence[Request] = (),
+                 closed: bool = False):
+        self._lock = threading.Lock()
+        self._seq = itertools.count()     # FIFO tie-break for equal arrivals
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._closed = False
+        for r in requests:
+            self.push(r)
+        if closed:
+            self.close()
+
+    @staticmethod
+    def from_trace(requests: Sequence[Request]) -> "RequestStream":
+        """A closed, replayable stream — the deterministic benchmark mode."""
+        return RequestStream(requests, closed=True)
+
+    def push(self, req: Request):
+        with self._lock:
+            assert not self._closed, "stream is closed"
+            heapq.heappush(self._heap, (req.arrival_s, next(self._seq), req))
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    @property
+    def exhausted(self) -> bool:
+        """Closed and fully drained — the serve loop's stop condition."""
+        with self._lock:
+            return self._closed and not self._heap
+
+    def poll(self, now: float) -> List[Request]:
+        """Pop every request that has arrived by ``now`` (arrival order)."""
+        out: List[Request] = []
+        with self._lock:
+            while self._heap and self._heap[0][0] <= now:
+                out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest pending arrival time, or None if nothing is queued."""
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
+
+    def peek_upcoming(self, n: int = 8) -> List[Request]:
+        """Up to ``n`` earliest pending requests WITHOUT popping them."""
+        with self._lock:
+            return [r for _, _, r in heapq.nsmallest(n, self._heap)]
+
+
+# ---------------------------------------------------------------------------
+# trace generators (seeded — tests and benchmarks replay identical traffic)
+# ---------------------------------------------------------------------------
+
+def _mk_request(model: str, t: float, rng: np.random.Generator,
+                vocab: int, seq: int, batch: int = 1) -> Request:
+    toks = rng.integers(0, vocab, (batch, seq), dtype=np.int32)
+    return Request(model=model, tokens=toks, arrival_s=t)
+
+
+def poisson_trace(rates: Dict[str, float], duration_s: float, *,
+                  vocab: int, seq: int, seed: int = 0) -> List[Request]:
+    """Independent Poisson arrivals per model (``rates`` in req/s)."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for model, rate in rates.items():
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= duration_s:
+                break
+            reqs.append(_mk_request(model, t, rng, vocab, seq))
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs
+
+
+def bursty_trace(base_rates: Dict[str, float], duration_s: float, *,
+                 burst_model: str, burst_at_s: float, burst_n: int,
+                 burst_span_s: float, vocab: int, seq: int,
+                 seed: int = 0) -> List[Request]:
+    """Poisson background traffic plus one dense burst of a single model —
+    the paper-motivated pattern that invalidates static interleave order."""
+    reqs = poisson_trace(base_rates, duration_s, vocab=vocab, seq=seq,
+                         seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    step = burst_span_s / max(burst_n, 1)
+    for i in range(burst_n):
+        reqs.append(_mk_request(burst_model, burst_at_s + i * step,
+                                rng, vocab, seq))
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs

@@ -1,0 +1,38 @@
+"""Serving-layer datatypes shared by the engine, batcher, and streams.
+
+Kept free of engine imports so ``serving/batcher.py`` and
+``serving/stream.py`` can build on ``Request`` without a cycle through
+``serving/engine.py`` (which imports both).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    model: str
+    tokens: np.ndarray
+    arrival_s: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Response:
+    model: str
+    latency_s: float
+    init_s: float
+    exec_s: float
+    peak_bytes: int
+    avg_bytes: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_hit_rate: float = 0.0
+    result: object = None
+    # online-loop fields (serve()): arrival-to-completion accounting and the
+    # coalesced batch the request rode in. run_all() leaves them at defaults.
+    arrival_s: float = 0.0
+    queue_s: float = 0.0
+    batch_size: int = 1

@@ -11,14 +11,35 @@ weights) in and out under a single byte budget:
   * ``acquire`` pins an entry (it cannot be evicted while an executor or
     prefetcher holds it) and counts a hit; a miss is counted so callers
     get end-to-end hit-rate accounting per model;
-  * ``put`` inserts under the budget, evicting least-recently-used
-    *unpinned* entries to make room; if even full eviction cannot fit the
-    entry, the put is rejected (the caller keeps a transient array) — the
-    pool's ``used_bytes`` therefore NEVER exceeds ``budget_bytes``;
+  * ``put`` inserts under the budget, evicting *unpinned* entries to make
+    room; if even full eviction cannot fit the entry, the put is rejected
+    (the caller keeps a transient array) — the pool's ``used_bytes``
+    therefore NEVER exceeds ``budget_bytes``;
   * pinning is how plans become eviction policy: the engine pins exactly
-    the chunks the next model's OverlapPlan schedules earliest, so LRU
-    pressure from the currently-executing model cannot throw away bytes
-    that are about to be consumed ("plan-aware pinned eviction").
+    the chunks the next model's OverlapPlan schedules earliest, so
+    eviction pressure from the currently-executing model cannot throw away
+    bytes that are about to be consumed ("plan-aware pinned eviction").
+
+Eviction policy is pluggable (Demand Layering, PAPERS.md):
+
+  * ``"lru"``  — least-recently-used unpinned entry first (default);
+  * ``"cost"`` — cheapest-to-restream unpinned entry first, where an
+    entry's restream cost is ``restream_bytes / disk_bw`` (``put`` takes
+    an optional ``restream_bytes`` — e.g. int8-quantized chunks restream
+    fewer bytes than they occupy on device; defaults to ``nbytes``).
+    Ties (equal cost) break in LRU order. Evicting cheap-to-reload bytes
+    first keeps expensive weights resident when policies compete for one
+    pool.
+
+The ledger balances at all times::
+
+    used_bytes() == stats.inserted_bytes - stats.evicted_bytes
+                                         - stats.removed_bytes
+
+``evicted_*`` counts policy evictions (capacity pressure); ``removed_*``
+counts explicit removals (``remove`` / ``evict_model`` / ``clear`` and the
+old bytes replaced by a ``put`` refresh) — the two are separated so
+evicted-vs-restreamed accounting stays exact when policies are compared.
 
 Thread-safe: the engine's prefetch thread, executor loader threads, and
 the compute thread all touch the pool concurrently.
@@ -31,8 +52,10 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Any, Dict, Hashable, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+EVICTION_POLICIES = ("lru", "cost")
 
 
 @dataclass
@@ -41,8 +64,12 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     rejected_puts: int = 0
+    refreshes: int = 0
+    removals: int = 0
     inserted_bytes: int = 0
     evicted_bytes: int = 0
+    removed_bytes: int = 0
+    evicted_restream_bytes: int = 0    # bytes a re-load would actually move
 
     @property
     def hit_rate(self) -> float:
@@ -53,6 +80,11 @@ class CacheStats:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "rejected_puts": self.rejected_puts,
+                "refreshes": self.refreshes,
+                "removals": self.removals,
+                "evicted_bytes": self.evicted_bytes,
+                "removed_bytes": self.removed_bytes,
+                "evicted_restream_bytes": self.evicted_restream_bytes,
                 "hit_rate": self.hit_rate}
 
 
@@ -61,19 +93,24 @@ class _Entry:
     value: Any
     nbytes: int
     pins: int = 0
+    restream_bytes: int = 0            # bytes to stream it back (cost policy)
 
 
 class WeightCache:
-    """Budgeted LRU pool of device-resident weight chunks.
+    """Budgeted pool of device-resident weight chunks (LRU or cost-aware).
 
     Keys are tuples whose first element is the owning model's name — all
     per-model accounting (hit rate, resident bytes) derives from that.
     """
 
-    def __init__(self, budget_bytes: int, name: str = "pool"):
+    def __init__(self, budget_bytes: int, name: str = "pool",
+                 policy: str = "lru", disk_bw: float = 1e9):
         assert budget_bytes > 0, "cache budget must be positive"
+        assert policy in EVICTION_POLICIES, policy
         self.budget_bytes = int(budget_bytes)
         self.name = name
+        self.policy = policy
+        self.disk_bw = float(disk_bw) if disk_bw > 0 else 1e9
         self._entries: "OrderedDict[Tuple, _Entry]" = OrderedDict()
         self._used = 0
         self._lock = threading.RLock()
@@ -88,23 +125,38 @@ class WeightCache:
     def _mstats(self, key: Tuple) -> CacheStats:
         return self._model_stats.setdefault(self._model_of(key), CacheStats())
 
+    def _pick_victim(self) -> Optional[Tuple]:
+        if self.policy == "cost":
+            best, best_cost = None, None
+            for k, e in self._entries.items():   # insertion order = LRU order
+                if e.pins:
+                    continue
+                cost = e.restream_bytes / self.disk_bw
+                if best is None or cost < best_cost:   # strict <: ties -> LRU
+                    best, best_cost = k, cost
+            return best
+        for k, e in self._entries.items():           # OrderedDict = LRU order
+            if e.pins == 0:
+                return k
+        return None
+
     def _evict_until(self, need: int) -> bool:
-        """Evict LRU unpinned entries until `need` free bytes exist."""
+        """Evict unpinned entries (policy order) until `need` bytes free."""
         if need > self.budget_bytes:
             return False
         while self.budget_bytes - self._used < need:
-            victim = None
-            for k, e in self._entries.items():       # OrderedDict = LRU order
-                if e.pins == 0:
-                    victim = k
-                    break
+            victim = self._pick_victim()
             if victim is None:
                 return False
             e = self._entries.pop(victim)
             self._used -= e.nbytes
             self.stats.evictions += 1
             self.stats.evicted_bytes += e.nbytes
-            self._mstats(victim).evictions += 1
+            self.stats.evicted_restream_bytes += e.restream_bytes
+            ms = self._mstats(victim)
+            ms.evictions += 1
+            ms.evicted_bytes += e.nbytes
+            ms.evicted_restream_bytes += e.restream_bytes
         return True
 
     # -- core API ----------------------------------------------------------
@@ -123,35 +175,47 @@ class WeightCache:
             ms.hits += 1
             return e.value
 
-    def put(self, key: Tuple, value: Any, nbytes: int,
-            pin: bool = False) -> bool:
-        """Insert under budget; returns False (rejected) if it cannot fit
-        after evicting every unpinned entry. A rejected value stays the
-        caller's transient responsibility — the pool never over-commits."""
+    def put(self, key: Tuple, value: Any, nbytes: int, pin: bool = False,
+            restream_bytes: Optional[int] = None) -> bool:
+        """Insert or refresh under budget; returns False (rejected) if the
+        entry cannot fit after evicting every unpinned entry. A rejected
+        value stays the caller's transient responsibility — the pool never
+        over-commits. Re-putting an existing key REPLACES its value and
+        size (pins carry over; a rejected refresh keeps the old entry)."""
         nbytes = int(nbytes)
+        restream = int(restream_bytes) if restream_bytes is not None \
+            else nbytes
         with self._lock:
-            e = self._entries.get(key)
-            if e is not None:                       # refresh existing entry
-                if pin:
-                    e.pins += 1
-                self._entries.move_to_end(key)
-                return True
+            ms = self._mstats(key)
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._used -= old.nbytes
             if not self._evict_until(nbytes):
                 self.stats.rejected_puts += 1
-                self._mstats(key).rejected_puts += 1
+                ms.rejected_puts += 1
+                if old is not None:                 # restore at MRU position
+                    self._entries[key] = old
+                    self._used += old.nbytes
                 return False
-            self._entries[key] = _Entry(value, nbytes, pins=1 if pin else 0)
+            pins = (old.pins if old is not None else 0) + (1 if pin else 0)
+            self._entries[key] = _Entry(value, nbytes, pins=pins,
+                                        restream_bytes=restream)
             self._used += nbytes
             self.stats.inserted_bytes += nbytes
-            self._mstats(key).inserted_bytes += nbytes
+            ms.inserted_bytes += nbytes
+            if old is not None:                     # ledger: old bytes leave
+                self.stats.refreshes += 1
+                self.stats.removed_bytes += old.nbytes
+                ms.refreshes += 1
+                ms.removed_bytes += old.nbytes
             return True
 
     def pin_existing(self, key: Tuple) -> Optional[int]:
         """Pin an already-resident entry WITHOUT hit/miss accounting;
         returns its nbytes, or None if absent. This is the engine's
         plan-aware protection primitive: entries the schedule says are
-        needed soon get pinned so the current model's LRU pressure cannot
-        evict them (sequential streaming otherwise thrashes a shared LRU
+        needed soon get pinned so the current model's eviction pressure
+        cannot drop them (sequential streaming otherwise thrashes a shared
         pool — every insert evicts exactly the bytes needed next)."""
         with self._lock:
             e = self._entries.get(key)
@@ -171,12 +235,18 @@ class WeightCache:
 
     def remove(self, key: Tuple) -> bool:
         """Drop an entry regardless of pins — used by the owning executor
-        when chunk entries are consumed into an assembled weight."""
+        when chunk entries are consumed into an assembled weight. Counted
+        as an explicit removal (not an eviction) in the ledger."""
         with self._lock:
             e = self._entries.pop(key, None)
             if e is None:
                 return False
             self._used -= e.nbytes
+            self.stats.removals += 1
+            self.stats.removed_bytes += e.nbytes
+            ms = self._mstats(key)
+            ms.removals += 1
+            ms.removed_bytes += e.nbytes
             return True
 
     # -- queries -----------------------------------------------------------
@@ -188,6 +258,12 @@ class WeightCache:
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
+
+    def pins(self, key: Tuple) -> int:
+        """Current pin count (0 for absent keys) — invariant probes."""
+        with self._lock:
+            e = self._entries.get(key)
+            return e.pins if e is not None else 0
 
     def used_bytes(self) -> int:
         with self._lock:
@@ -218,8 +294,18 @@ class WeightCache:
         with self._lock:
             return list(self._entries)
 
+    def ledger_balanced(self) -> bool:
+        """inserted == resident + evicted + removed — exact byte accounting
+        (the Pisarchyk/Lee shared-buffer motivation: when policies compete
+        for one pool, evicted-vs-restreamed byte counts must be precise)."""
+        with self._lock:
+            return self._used == (self.stats.inserted_bytes
+                                  - self.stats.evicted_bytes
+                                  - self.stats.removed_bytes)
+
     def evict_model(self, model: str) -> int:
-        """Drop every unpinned entry of one model; returns bytes freed."""
+        """Drop every unpinned entry of one model; returns bytes freed.
+        Counted as explicit removals, not evictions."""
         with self._lock:
             freed = 0
             for k in [k for k, e in self._entries.items()
@@ -230,5 +316,5 @@ class WeightCache:
 
     def clear(self):
         with self._lock:
-            self._entries.clear()
-            self._used = 0
+            for k in list(self._entries):
+                self.remove(k)

@@ -1,0 +1,83 @@
+"""batch_requests / make_batch / split_batch_result edge cases: padding
+for mixed sequence lengths, per-model FIFO, the max_wait_s window,
+cross-model isolation, and round-trip de-batching."""
+import numpy as np
+
+from repro.serving.batcher import (BatcherConfig, batch_requests,
+                                   group_requests, make_batch,
+                                   split_batch_result)
+from repro.serving.types import Request
+
+
+def _req(model, seq, fill, t):
+    return Request(model=model,
+                   tokens=np.full((1, seq), fill, np.int32), arrival_s=t)
+
+
+def test_padding_correct_for_mixed_sequence_lengths():
+    cfg = BatcherConfig(max_batch=4, max_wait_s=1.0, pad_id=9)
+    reqs = [_req("m", 3, 1, 0.0), _req("m", 5, 2, 0.1), _req("m", 2, 3, 0.2)]
+    batch = make_batch(reqs, cfg)
+    assert batch.tokens.shape == (3, 5)
+    assert batch.tokens.dtype == np.int32
+    np.testing.assert_array_equal(batch.tokens[0], [1, 1, 1, 9, 9])
+    np.testing.assert_array_equal(batch.tokens[1], [2, 2, 2, 2, 2])
+    np.testing.assert_array_equal(batch.tokens[2], [3, 3, 9, 9, 9])
+    assert batch.row_spans == [(0, 1), (1, 2), (2, 3)]
+    assert batch.seq_lens == [3, 5, 2]
+
+
+def test_per_model_fifo_preserved():
+    cfg = BatcherConfig(max_batch=8, max_wait_s=1.0)
+    reqs = [_req("a", 4, i, 0.01 * i) for i in range(5)]
+    out = batch_requests(reqs, cfg)
+    assert len(out) == 1
+    # rows appear in submission order
+    np.testing.assert_array_equal(out[0].tokens[:, 0], [0, 1, 2, 3, 4])
+    assert out[0].arrival_s == reqs[0].arrival_s     # group head's arrival
+
+
+def test_max_wait_window_respected():
+    cfg = BatcherConfig(max_batch=8, max_wait_s=0.05)
+    reqs = [_req("a", 4, 0, 0.00), _req("a", 4, 1, 0.04),
+            _req("a", 4, 2, 0.10),                   # outside head's window
+            _req("a", 4, 3, 0.11)]
+    groups = group_requests(reqs, cfg)
+    assert [len(g) for g in groups] == [2, 2]
+    assert groups[0][0].arrival_s == 0.00 and groups[1][0].arrival_s == 0.10
+
+
+def test_max_batch_respected():
+    cfg = BatcherConfig(max_batch=2, max_wait_s=10.0)
+    reqs = [_req("a", 4, i, 0.0) for i in range(5)]
+    groups = group_requests(reqs, cfg)
+    assert [len(g) for g in groups] == [2, 2, 1]
+
+
+def test_cross_model_requests_never_coalesced():
+    cfg = BatcherConfig(max_batch=8, max_wait_s=10.0)
+    reqs = [_req("a", 4, 0, 0.0), _req("b", 4, 1, 0.0),
+            _req("a", 4, 2, 0.0), _req("a", 4, 3, 0.0)]
+    out = batch_requests(reqs, cfg)
+    # b breaks the run: [a], [b], [a, a] — order across models preserved
+    assert [r.model for r in out] == ["a", "b", "a"]
+    assert [r.tokens.shape[0] for r in out] == [1, 1, 2]
+
+
+def test_single_request_passes_through_unchanged():
+    cfg = BatcherConfig()
+    r = _req("a", 4, 7, 0.0)
+    out = batch_requests([r], cfg)
+    assert out[0] is r
+
+
+def test_round_trip_debatching_restores_per_request_results():
+    cfg = BatcherConfig(max_batch=4, max_wait_s=1.0)
+    reqs = [_req("m", 3, 1, 0.0), _req("m", 5, 2, 0.1), _req("m", 2, 3, 0.2)]
+    batch = make_batch(reqs, cfg)
+    # a shape-preserving "model": result rows mirror the padded tokens
+    result = (batch.tokens * 10.0)[..., None]                # (3, 5, 1)
+    parts = split_batch_result(batch, result)
+    assert [p.shape for p in parts] == [(1, 3, 1), (1, 5, 1), (1, 2, 1)]
+    for req, part in zip(reqs, parts):
+        np.testing.assert_array_equal(part[..., 0], req.tokens * 10.0)

@@ -1,0 +1,326 @@
+"""Online serving loop scenarios — all driven by the injectable SimClock
+and replayable RequestStream traces: no real sleeps, no wall-clock
+assertions. Covers the ISSUE's deterministic scenarios (burst flips the
+prefetch target; empty-queue idle then arrival; interleave fairness under
+skewed rates), clock/stream primitives, and end-to-end de-batched output
+exactness."""
+from collections import deque
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import MonotonicClock, SimClock
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.stream import (RequestStream, bursty_trace, poisson_trace)
+
+CFG = replace(GPTNEO_S, num_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+              d_ff=128, vocab=256, name="tiny")
+SEQ = 16
+CHUNK = 16 << 10
+EXEC = 0.05
+
+
+def _tok(rng, seq=SEQ):
+    return rng.integers(0, CFG.vocab, (1, seq), dtype=np.int32)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {n: HostModel.build(replace(CFG, name=n), seq=SEQ, seed=i)
+            for i, n in enumerate(("a", "b", "c"))}
+
+
+def _engine(models, **kw):
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    kw.setdefault("budget_bytes", int(0.6 * combined))
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK, **kw)
+    for n, m in models.items():
+        eng.register(n, m)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# clock + stream primitives
+# ---------------------------------------------------------------------------
+
+def test_sim_clock_is_deterministic():
+    c = SimClock(exec_time=0.25)
+    assert c.now() == 0.0
+    c.sleep(1.5)
+    assert c.now() == 1.5 and c.slept_s == 1.5
+    c.tick(123.0, "m")                    # real duration ignored: fixed charge
+    assert c.now() == 1.75
+    per_model = SimClock(exec_time=lambda m: {"a": 0.1, "b": 0.2}[m])
+    per_model.tick(9.9, "a")
+    per_model.tick(9.9, "b")
+    assert per_model.now() == pytest.approx(0.3)
+    charged = SimClock()                  # exec_time None: charge real dt
+    charged.tick(0.125, "m")
+    assert charged.now() == pytest.approx(0.125)
+    assert MonotonicClock().tick(0.5) == 0.5        # no-op passthrough
+
+
+def test_request_stream_orders_polls_and_exhausts():
+    rng = np.random.default_rng(0)
+    reqs = [Request("a", _tok(rng), arrival_s=t) for t in (0.3, 0.1, 0.2)]
+    s = RequestStream.from_trace(reqs)
+    assert s.next_arrival() == 0.1
+    assert [r.arrival_s for r in s.peek_upcoming()] == [0.1, 0.2, 0.3]
+    assert [r.arrival_s for r in s.poll(0.2)] == [0.1, 0.2]
+    assert not s.exhausted
+    assert s.poll(0.25) == []
+    assert [r.arrival_s for r in s.poll(1.0)] == [0.3]
+    assert s.exhausted
+    live = RequestStream()
+    assert not live.closed and live.poll(10.0) == []
+    live.push(Request("a", _tok(rng), arrival_s=0.5))
+    live.close()
+    assert len(live.poll(1.0)) == 1 and live.exhausted
+
+
+def test_trace_generators_are_seeded_and_sorted():
+    t1 = poisson_trace({"a": 5.0, "b": 3.0}, 2.0, vocab=64, seq=8, seed=42)
+    t2 = poisson_trace({"a": 5.0, "b": 3.0}, 2.0, vocab=64, seq=8, seed=42)
+    assert [(r.model, r.arrival_s) for r in t1] == \
+           [(r.model, r.arrival_s) for r in t2]
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(t1, t1[1:]))
+    bt = bursty_trace({"a": 2.0}, 1.0, burst_model="b", burst_at_s=0.5,
+                      burst_n=4, burst_span_s=0.2, vocab=64, seq=8, seed=1)
+    assert sum(r.model == "b" for r in bt) == 4
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(bt, bt[1:]))
+
+
+# ---------------------------------------------------------------------------
+# scheduling decisions (unit level)
+# ---------------------------------------------------------------------------
+
+def test_burst_flips_prefetch_target_decision(models):
+    """The ISSUE scenario at decision level: while `a` runs, the target is
+    a speculative warm of the trace's next foreign arrival (c) — until a
+    burst of b lands in the queue, which flips the target to b."""
+    eng = _engine(models)
+    rng = np.random.default_rng(0)
+    pending = {"a": deque([Request("a", _tok(rng), arrival_s=0.0)]),
+               "b": deque(), "c": deque()}
+    stream = RequestStream.from_trace(
+        [Request("c", _tok(rng), arrival_s=1.0)])
+    assert eng._pick_prefetch_target(pending, stream, "a") == ("c", True)
+    burst_t = 0.2
+    pending["b"].extend(Request("b", _tok(rng), arrival_s=burst_t + 0.01 * i)
+                        for i in range(3))
+    assert eng._pick_prefetch_target(pending, stream, "a") == ("b", False)
+    # static scheduler ignores the burst: rotation after `a` picks b only
+    # by registration order coincidence — give c a queued request and check
+    # static still follows rotation while arrival follows the queue state
+    pending["c"].append(Request("c", _tok(rng), arrival_s=0.05))
+    assert eng._pick_prefetch_target(
+        pending, stream, "a", scheduler="static")[0] == "b"
+    # arrival-aware: c's head has waited since 0.05 < burst_t -> c wins now
+    assert eng._pick_prefetch_target(pending, stream, "a") == ("c", False)
+
+
+def test_pick_next_model_earliest_head_with_rr_tiebreak(models):
+    eng = _engine(models)
+    rng = np.random.default_rng(0)
+    pending = {"a": deque([Request("a", _tok(rng), arrival_s=0.2)]),
+               "b": deque([Request("b", _tok(rng), arrival_s=0.1)]),
+               "c": deque()}
+    assert eng._pick_next_model(pending, None) == "b"
+    # equal arrivals rotate after `last`
+    pending["c"].append(Request("c", _tok(rng), arrival_s=0.1))
+    assert eng._pick_next_model(pending, "b") == "c"
+    assert eng._pick_next_model(pending, "c") == "b"
+    # static ignores arrivals entirely: registration rotation after last
+    assert eng._pick_next_model(pending, "a", "static") == "b"
+    assert eng._pick_next_model(pending, "b", "static") == "c"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end scenarios (SimClock-driven serve loop)
+# ---------------------------------------------------------------------------
+
+def test_burst_redirects_prefetch_in_serve_loop(models):
+    """End to end: a mid-stream one-model burst produces a NON-speculative
+    prefetch of the burst model, and the decision log diverges from the
+    static interleave replay of the identical trace."""
+    rng = np.random.default_rng(1)
+    # arrivals slightly faster than the EXEC service rate: a backlog builds,
+    # so prefetch decisions are made against real queue state
+    trace = [Request("a", _tok(rng), arrival_s=0.045 * i) for i in range(8)]
+    trace += [Request("c", _tok(rng), arrival_s=t) for t in (0.02, 0.33)]
+    burst_t = 0.14
+    trace += [Request("b", _tok(rng), arrival_s=burst_t + 0.01 * i)
+              for i in range(3)]
+    trace.sort(key=lambda r: r.arrival_s)
+
+    logs = {}
+    for sched in ("arrival", "static"):
+        eng = _engine(models)
+        responses = eng.serve(RequestStream.from_trace(list(trace)),
+                              clock=SimClock(exec_time=EXEC), scheduler=sched,
+                              batcher=BatcherConfig(max_batch=4,
+                                                    max_wait_s=0.01))
+        assert len(responses) == len(trace)
+        logs[sched] = list(eng.prefetch_log)
+    hits_b = [(t, cur, tgt, spec) for t, cur, tgt, spec in logs["arrival"]
+              if tgt == "b" and not spec]
+    assert hits_b, "burst never became a live (non-speculative) target"
+    assert min(t for t, *_ in hits_b) >= burst_t
+    assert logs["arrival"] != logs["static"]
+    # static mode never speculates from the trace's future arrivals
+    assert all(not spec for _, _, _, spec in logs["static"])
+
+
+def test_empty_queue_idles_to_next_arrival_then_serves(models):
+    rng = np.random.default_rng(2)
+    gap_t = 5.0
+    trace = [Request("a", _tok(rng), arrival_s=0.0),
+             Request("b", _tok(rng), arrival_s=gap_t)]
+    eng = _engine(models)
+    clock = SimClock(exec_time=EXEC)
+    responses = eng.serve(RequestStream.from_trace(trace), clock=clock)
+    assert len(responses) == 2
+    # the loop slept the queue-empty gap away on the virtual clock
+    assert any(nxt == gap_t for _, nxt in eng.idle_log)
+    assert clock.slept_s == pytest.approx(gap_t - EXEC)
+    assert clock.now() == pytest.approx(gap_t + EXEC)
+    late = responses[-1]
+    assert late.model == "b"
+    assert late.queue_s == 0.0                     # served on arrival
+    assert late.latency_s == pytest.approx(EXEC)
+
+
+def test_interleave_fairness_under_skewed_rates(models):
+    """3 models, heavily skewed rates: the arrival-aware picker is global
+    FIFO over queue heads, so the low-rate model's lone request is served
+    before any batch whose head arrived later — no starvation."""
+    rng = np.random.default_rng(3)
+    trace = [Request("a", _tok(rng), arrival_s=0.02 * i) for i in range(10)]
+    trace += [Request("b", _tok(rng), arrival_s=t) for t in (0.05, 0.15)]
+    c_t = 0.06
+    trace += [Request("c", _tok(rng), arrival_s=c_t)]
+    trace.sort(key=lambda r: r.arrival_s)
+    eng = _engine(models)
+    responses = eng.serve(RequestStream.from_trace(trace),
+                          clock=SimClock(exec_time=EXEC),
+                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.03))
+    by_model = {}
+    for r in responses:
+        by_model.setdefault(r.model, []).append(r)
+    assert len(by_model["a"]) == 10
+    assert len(by_model["b"]) == 2
+    assert len(by_model["c"]) == 1
+    # once c is queued, only heads that arrived before it can run first —
+    # c never starves: it waits at most the in-flight batch + the (few)
+    # earlier-arrived heads
+    c_start = next(t for t, m, _ in eng.batch_log if m == "c")
+    assert c_start <= c_t + 3 * EXEC
+    # per-model FIFO: each model's responses complete in arrival order
+    for m, rs in by_model.items():
+        arrivals = [r.arrival_s for r in rs]
+        assert arrivals == sorted(arrivals), m
+
+
+def test_serve_outputs_debatch_bit_for_bit(models):
+    """Mixed sequence lengths coalesce into padded batches; de-batched
+    streamed outputs equal per-request solo preload references exactly."""
+    rng = np.random.default_rng(4)
+    trace = []
+    for i in range(4):
+        trace.append(Request("a", _tok(rng, seq=12 + 2 * i),
+                             arrival_s=0.01 * i))
+    trace.append(Request("b", _tok(rng), arrival_s=0.02))
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    refs = [np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace]
+    eng = _engine(models)
+    responses = eng.serve(RequestStream.from_trace(list(trace)),
+                          clock=SimClock(exec_time=EXEC),
+                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.05))
+    assert len(responses) == len(trace)
+    assert max(r.batch_size for r in responses) > 1    # coalescing happened
+    by_key = {(r.model, r.arrival_s): r for r in responses}
+    for req, ref in zip(trace, refs):
+        got = by_key[(req.model, req.arrival_s)]
+        assert np.array_equal(np.asarray(got.result), ref), req.model
+
+
+def test_unregistered_model_request_is_rejected_not_fatal(models):
+    """A request for an unknown model must not crash the loop or strand
+    the valid requests queued behind it."""
+    rng = np.random.default_rng(6)
+    trace = [Request("a", _tok(rng), arrival_s=0.0),
+             Request("ghost", _tok(rng), arrival_s=0.01),
+             Request("b", _tok(rng), arrival_s=0.02)]
+    eng = _engine(models)
+    responses = eng.serve(RequestStream.from_trace(trace),
+                          clock=SimClock(exec_time=EXEC))
+    assert sorted(r.model for r in responses) == ["a", "b"]
+    assert [r.model for r in eng.rejected] == ["ghost"]
+
+
+def test_live_stream_idle_sleep_capped_at_poll_interval(models):
+    """With a live (not closed) stream, idle waits must stay short —
+    a producer can push an earlier request at any moment. Closed traces
+    keep the single full-gap sleep."""
+    rng = np.random.default_rng(7)
+    stream = RequestStream()                        # live: NOT closed
+    stream.push(Request("a", _tok(rng), arrival_s=1.0))
+    poll_s = 0.001
+
+    class ClosingClock(SimClock):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.sleeps = []
+
+        def sleep(self, dt):
+            self.sleeps.append(dt)
+            super().sleep(dt)
+            if len(self.sleeps) == 3:               # let the loop finish
+                stream.close()
+
+    clock = ClosingClock(exec_time=EXEC)
+    responses = _engine(models).serve(stream, clock=clock,
+                                      poll_interval_s=poll_s)
+    assert len(responses) == 1
+    assert all(dt == poll_s for dt in clock.sleeps[:3])   # capped while live
+    assert max(clock.sleeps) > poll_s               # full-gap once closed
+
+
+def test_model_report_counts_requests_not_batches(models):
+    rng = np.random.default_rng(8)
+    trace = [Request("a", _tok(rng), arrival_s=0.01 * i) for i in range(4)]
+    eng = _engine(models)
+    responses = eng.serve(RequestStream.from_trace(trace),
+                          clock=SimClock(exec_time=EXEC),
+                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.1))
+    assert len(eng.batch_log) < len(trace)          # coalescing happened
+    rep = eng.model_report()
+    assert rep["a"].requests == len(trace)
+
+
+def test_serve_with_cost_eviction_stays_exact_and_balanced(models):
+    rng = np.random.default_rng(5)
+    trace = poisson_trace({"a": 8.0, "b": 6.0, "c": 4.0}, 0.8,
+                          vocab=CFG.vocab, seq=SEQ, seed=11)
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    refs = [np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace]
+    eng = _engine(models, eviction="cost",
+                  budget_bytes=int(0.4 * sum(
+                      sum(a.nbytes for a in m.host_weights.values())
+                      for m in models.values())))
+    responses = eng.serve(RequestStream.from_trace(list(trace)),
+                          clock=SimClock(exec_time=EXEC),
+                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.04))
+    assert len(responses) == len(trace)
+    by_key = {(r.model, r.arrival_s): r for r in responses}
+    for req, ref in zip(trace, refs):
+        assert np.array_equal(np.asarray(by_key[(req.model,
+                                                 req.arrival_s)].result), ref)
+    assert eng.cache.policy == "cost"
+    assert eng.cache.used_bytes() <= eng.cache.budget_bytes
+    assert eng.cache.ledger_balanced()

@@ -121,3 +121,30 @@ def test_prefetch_schedule_respects_byte_limit():
         first_ops = sorted(plan.loads)
         assert chunks[0].weight in {t.weight
                                     for t in plan.loads[first_ops[0]]}
+
+
+def test_prefetch_schedule_lookahead_bounds_depth_and_preload():
+    g = _graph("yi-6b")
+    budget = _budget(g)
+    mm = plan_multi_model({"yi": g}, CHUNK, budget, hw=HW)
+    sizes = {w.name: w.bytes for w in g.weights.values()}
+    plan = mm.plans["yi"]
+    whole_full, chunks_full = mm.prefetch_schedule("yi", sizes, budget)
+    k = 2
+    whole_k, chunks_k = mm.prefetch_schedule("yi", sizes, budget,
+                                             lookahead_ops=k)
+    # both halves of the schedule are bounded: at most k preload weights,
+    # chunk tasks only from the first k load-issuing ops
+    assert len(whole_k) <= k
+    assert whole_k == whole_full[: len(whole_k)]
+    allowed = {t.weight for l in sorted(plan.loads)[:k]
+               for t in plan.loads[l]}
+    assert all(t.weight in allowed for t in chunks_k)
+    bytes_k = sum(sizes[w] for w in whole_k) \
+        + sum(t.n_chunks for t in chunks_k) * CHUNK
+    bytes_full = sum(sizes[w] for w in whole_full) \
+        + sum(t.n_chunks for t in chunks_full) * CHUNK
+    assert bytes_k <= bytes_full
+    # lookahead 0 schedules nothing at all
+    assert mm.prefetch_schedule("yi", sizes, budget,
+                                lookahead_ops=0) == ([], [])

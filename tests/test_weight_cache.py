@@ -112,6 +112,121 @@ def test_remove_ignores_pins_and_release_is_noop_on_absent():
     assert not c.remove(("m", "a", "w"))
 
 
+def test_put_refresh_replaces_value_and_adjusts_used_bytes():
+    """Regression: re-putting an existing key must replace the value and
+    nbytes — the seed kept the stale entry silently."""
+    c = WeightCache(budget_bytes=8 * KB)
+    old = _arr(2)
+    assert c.put(("m", "a", "w"), old, 2 * KB)
+    assert c.used_bytes() == 2 * KB
+    new = np.ones(3 * KB, np.uint8)
+    assert c.put(("m", "a", "w"), new, 3 * KB)      # refresh, bigger
+    assert c.used_bytes() == 3 * KB
+    assert c.acquire(("m", "a", "w")) is new        # value replaced
+    assert c.stats.refreshes == 1
+    c.release(("m", "a", "w"))
+    assert c.put(("m", "a", "w"), _arr(1), KB)      # refresh, smaller
+    assert c.used_bytes() == KB
+    assert c.ledger_balanced()
+
+
+def test_put_refresh_grows_under_pressure_and_keeps_pins():
+    c = WeightCache(budget_bytes=4 * KB)
+    assert _put(c, "m", "victim", n_kb=2)           # LRU filler
+    assert _put(c, "m", "a", pin=True)
+    # growing a to 3KB requires evicting the unpinned filler, not a itself
+    assert c.put(("m", "a", "w"), _arr(3), 3 * KB)
+    assert c.used_bytes() == 3 * KB
+    assert not c.contains(("m", "victim", "w"))
+    assert c.pins(("m", "a", "w")) == 1             # pin carried over
+    # a is still pinned -> pressure cannot evict it
+    assert not _put(c, "m", "x", n_kb=2)
+    assert c.contains(("m", "a", "w"))
+
+
+def test_put_refresh_rejected_keeps_old_entry():
+    c = WeightCache(budget_bytes=4 * KB)
+    assert _put(c, "m", "p", n_kb=2, pin=True)
+    old = _arr(2)
+    assert c.put(("m", "a", "w"), old, 2 * KB)
+    # refresh to 3KB cannot fit (2KB pinned elsewhere): rejected, old stays
+    assert not c.put(("m", "a", "w"), _arr(3), 3 * KB)
+    assert c.used_bytes() == 4 * KB
+    assert c.acquire(("m", "a", "w")) is old
+    assert c.stats.rejected_puts == 1
+    assert c.ledger_balanced()
+
+
+def test_remove_and_evict_model_are_counted_and_ledger_balances():
+    """Regression: the seed freed bytes in remove/evict_model without
+    recording them — evicted_bytes drifted from reality. Explicit removals
+    are now a separate ledger column and the ledger always balances:
+    inserted == resident + evicted + removed."""
+    c = WeightCache(budget_bytes=4 * KB)
+    for w in ("a", "b", "c", "d"):
+        assert _put(c, "m", w)
+    assert c.remove(("m", "a", "w"))
+    assert c.stats.removals == 1
+    assert c.stats.removed_bytes == KB
+    assert c.stats.evictions == 0                   # removals != evictions
+    _put(c, "m", "e", n_kb=2)                       # evicts b (LRU)
+    assert c.stats.evictions == 1
+    assert c.stats.evicted_bytes == KB
+    freed = c.evict_model("m")
+    assert freed == 4 * KB
+    assert c.stats.removals == 1 + 3                # a + (c, d, e)
+    assert c.stats.removed_bytes == KB + 4 * KB
+    assert c.used_bytes() == 0
+    assert c.ledger_balanced()
+    assert c.stats.inserted_bytes == (c.stats.evicted_bytes
+                                      + c.stats.removed_bytes)
+
+
+def test_clear_keeps_ledger_balanced():
+    c = WeightCache(budget_bytes=8 * KB)
+    for w in ("a", "b", "c"):
+        _put(c, "m", w, pin=(w == "b"))
+    c.clear()
+    assert c.used_bytes() == 0
+    assert not c.keys()
+    assert c.ledger_balanced()
+
+
+def test_cost_policy_evicts_cheapest_to_restream_first():
+    """Demand-Layering-style eviction: the victim is the unpinned entry
+    with the lowest restream cost (restream_bytes / disk_bw), not the LRU
+    one."""
+    c = WeightCache(budget_bytes=4 * KB, policy="cost")
+    assert c.put(("m", "small", "w"), _arr(1), KB)          # cheapest
+    assert c.put(("m", "big", "w"), _arr(3), 3 * KB)
+    c.touch(("m", "small", "w"))       # small is MRU; LRU policy would pick big
+    assert c.put(("m", "x", "w"), _arr(1), KB)
+    assert not c.contains(("m", "small", "w"))              # cost victim
+    assert c.contains(("m", "big", "w"))
+    assert c.stats.evicted_restream_bytes == KB
+
+
+def test_cost_policy_uses_restream_bytes_override_and_lru_tiebreak():
+    c = WeightCache(budget_bytes=4 * KB, policy="cost")
+    # big occupies 3KB on device but restreams as 1KB (e.g. int8 chunks)
+    assert c.put(("m", "big", "w"), _arr(3), 3 * KB, restream_bytes=KB)
+    assert c.put(("m", "small", "w"), _arr(1), KB)
+    # equal restream cost -> LRU order breaks the tie -> big (older) goes
+    assert c.put(("m", "x", "w"), _arr(3), 3 * KB)
+    assert not c.contains(("m", "big", "w"))
+    assert c.contains(("m", "small", "w"))
+    assert c.stats.evicted_restream_bytes == KB
+
+
+def test_cost_policy_never_evicts_pinned():
+    c = WeightCache(budget_bytes=3 * KB, policy="cost")
+    assert c.put(("m", "cheap", "w"), _arr(1), KB, pin=True)
+    assert c.put(("m", "mid", "w"), _arr(2), 2 * KB)
+    assert c.put(("m", "x", "w"), _arr(2), 2 * KB)   # must evict mid, not cheap
+    assert c.contains(("m", "cheap", "w"))
+    assert not c.contains(("m", "mid", "w"))
+
+
 def test_evict_model_drops_only_unpinned_entries_of_that_model():
     c = WeightCache(budget_bytes=16 * KB)
     _put(c, "a", "w0")

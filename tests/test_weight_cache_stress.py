@@ -1,0 +1,92 @@
+"""Multithreaded WeightCache stress: N threads hammering put / acquire /
+release / evict_model concurrently, under both eviction policies.
+
+Invariants checked throughout and at quiescence:
+  * used_bytes() <= budget_bytes ALWAYS (the pool never over-commits);
+  * pin counts never go negative;
+  * a pinned entry is never evicted while its owner holds the pin;
+  * the byte ledger balances once all threads are done.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving.weight_cache import WeightCache
+
+KB = 1024
+N_THREADS = 8
+OPS = 300
+
+
+def _val(n_kb):
+    return np.zeros(n_kb * KB, np.uint8)
+
+
+@pytest.mark.parametrize("policy", ["lru", "cost"])
+def test_concurrent_hammer_invariants(policy):
+    budget = 64 * KB
+    c = WeightCache(budget_bytes=budget, policy=policy)
+    violations = []
+    stop = threading.Event()
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        model = f"m{tid % 3}"                        # models shared by threads
+        own = (f"own{tid}", "pinned", "w")           # this thread's pinned key
+        held = False
+        for i in range(OPS):
+            op = rng.integers(0, 100)
+            if op < 40:                              # put (sometimes pinned)
+                n_kb = int(rng.integers(1, 5))
+                c.put((model, f"w{int(rng.integers(0, 20))}", "w"),
+                      _val(n_kb), n_kb * KB,
+                      pin=False,
+                      restream_bytes=n_kb * KB // int(rng.integers(1, 3)))
+            elif op < 60:                            # acquire + release
+                key = (model, f"w{int(rng.integers(0, 20))}", "w")
+                if c.acquire(key) is not None:
+                    c.release(key)
+            elif op < 75:                            # own pinned entry cycle
+                if not held:
+                    held = c.put(own, _val(1), KB, pin=True)
+                else:
+                    # while the pin is held, eviction must never drop it
+                    if not c.contains(own):
+                        violations.append(f"t{tid}: pinned entry evicted")
+                    if c.pins(own) < 1:
+                        violations.append(f"t{tid}: pin count dropped")
+                    c.release(own)
+                    c.remove(own)                    # own key: safe to drop
+                    held = False
+            elif op < 90:                            # eviction pressure
+                n_kb = int(rng.integers(4, 8))
+                c.put((model, "big", "w"), _val(n_kb), n_kb * KB)
+            else:
+                c.evict_model(model)
+            if c.used_bytes() > budget:
+                violations.append(f"t{tid}: over budget at op {i}")
+            if stop.is_set():
+                break
+        if held:
+            c.release(own)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "worker deadlocked"
+    stop.set()
+
+    assert not violations, violations[:5]
+    assert c.used_bytes() <= c.budget_bytes
+    with c._lock:                                    # quiescent introspection
+        for k, e in c._entries.items():
+            assert e.pins >= 0, f"negative pins on {k}"
+    assert c.ledger_balanced()
+    # the hammer actually exercised the interesting paths
+    assert c.stats.evictions > 0
+    assert c.stats.removals > 0
+    assert c.stats.hits + c.stats.misses > 0
