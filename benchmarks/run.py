@@ -8,6 +8,7 @@ Mapping to the paper (DESIGN.md §7):
     Table 8  -> memory_e2e          Fig 2/4 -> load_capacity
     Fig 6    -> multi_model         Fig 7   -> ablation
     §4.4 online -> bursty_arrivals (scheduler × eviction A/B)
+    §4.4 SLO    -> slo_overload (fifo vs slo vs static under overload)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
 """
@@ -24,6 +25,7 @@ SUITES = [
     "memory_e2e",
     "multi_model",
     "bursty_arrivals",
+    "slo_overload",
     "ablation",
     "tradeoff",
     "naive_overlap",

@@ -1,0 +1,169 @@
+"""SLO-aware serving under sustained overload: fifo vs slo vs static.
+
+Replays the same seeded Poisson trace at 1x/2x/4x the service rate
+through the online loop under each scheduler and reports, per
+(load × scheduler) cell: p50/p99 served latency, deadline-miss-rate, and
+rejection-rate. Everything runs on a ``SimClock`` with a fixed virtual
+execution charge per batch and a seeded trace, so the A/B isolates the
+*scheduler* — identical arrival timelines, identical work.
+
+The expected shape: under 1x all three behave alike; under sustained
+overload fifo queues unboundedly (miss rate → 1, no rejections) while
+slo sheds infeasible work explicitly (rejections absorb the overload,
+served requests keep making their deadlines). Served outputs are
+asserted bit-for-bit equal to per-request preload references — deadline
+scheduling must never change *what* is computed.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only slo_overload``
+Standalone JSON (the CI perf-trajectory artifact):
+``PYTHONPATH=src python -m benchmarks.slo_overload --smoke --out
+BENCH_slo_overload.json``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import SimClock
+from repro.serving.engine import ServingEngine
+from repro.serving.stream import RequestStream, poisson_trace
+from repro.serving.types import (SLOConfig, deadline_miss_rate,
+                                 rejection_rate)
+
+SEQ = 32
+CHUNK = 64 << 10
+EXEC_S = 0.05        # fixed virtual seconds per executed batch
+SLO_S = 0.20         # per-request latency SLO (deadline = arrival + SLO)
+SCHEDULERS = ("static", "fifo", "slo")
+
+
+def _models():
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    return {
+        "vision": HostModel.build(replace(base, name="vision", num_layers=2),
+                                  seq=SEQ, seed=0),
+        "asr": HostModel.build(replace(base, name="asr", num_layers=3),
+                               seq=SEQ, seed=1),
+        "lm": HostModel.build(replace(base, name="lm", num_layers=2),
+                              seq=SEQ, seed=2),
+    }
+
+
+def _trace(models, load_x: float, duration_s: float):
+    # service capacity is 1/EXEC_S batches/s; spread the offered load
+    # evenly over the three models so `load_x` is the global overload factor
+    vocab = min(m.cfg.vocab for m in models.values())
+    per_model_rate = load_x / (EXEC_S * len(models))
+    return poisson_trace({n: per_model_rate for n in models}, duration_s,
+                         vocab=vocab, seq=SEQ, seed=13)
+
+
+def _serve(models, trace, budget, scheduler):
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK,
+                        budget_bytes=budget)
+    for n, m in models.items():
+        eng.register(n, m)
+    responses = eng.serve(
+        RequestStream.from_trace(list(trace)),
+        clock=SimClock(exec_time=EXEC_S), scheduler=scheduler,
+        slo=SLOConfig(default_slo_s=SLO_S),
+        # seed the estimator with the exact virtual charge so admission /
+        # preemption projections are bit-reproducible from the first batch
+        cost_model=BatchLatencyEstimator(priors={n: EXEC_S for n in models}),
+        batcher=BatcherConfig(max_batch=2, max_wait_s=0.02))
+    return eng, responses
+
+
+def _metrics(eng, responses):
+    served = [r for r in responses if r.status == "ok"]
+    lats = np.array([r.latency_s for r in served]) if served else np.zeros(1)
+    return {
+        "requests": len(responses),
+        "served": len(served),
+        "batches": len(eng.batch_log),
+        "p50_s": float(np.percentile(lats, 50)),
+        "p99_s": float(np.percentile(lats, 99)),
+        "miss_rate": deadline_miss_rate(responses),
+        "rejection_rate": rejection_rate(responses),
+        "preemptions": len(eng.preempt_log),
+        "pool_hit_rate": eng.cache_hit_rate(),
+    }
+
+
+def sweep(loads=(1.0, 2.0, 4.0), duration_s=1.2, check_exact=True) -> dict:
+    models = _models()
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    budget = int(0.6 * combined)
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    result = {"bench": "slo_overload", "exec_s": EXEC_S, "slo_s": SLO_S,
+              "budget_bytes": budget, "duration_s": duration_s, "loads": {}}
+    for load in loads:
+        trace = _trace(models, load, duration_s)
+        refs = {(r.model, r.arrival_s):
+                np.asarray(ref_ex[r.model].run(r.tokens).result)
+                for r in trace} if check_exact else {}
+        cell = {}
+        for sched in SCHEDULERS:
+            eng, responses = _serve(models, trace, budget, sched)
+            assert len(responses) == len(trace), (sched, load)
+            if check_exact:
+                for r in responses:
+                    if r.status != "ok":
+                        continue
+                    assert np.array_equal(np.asarray(r.result),
+                                          refs[(r.model, r.arrival_s)]), \
+                        f"{sched}@{load}x output diverged for {r.model}"
+            cell[sched] = _metrics(eng, responses)
+        result["loads"][f"{load:g}x"] = cell
+    return result
+
+
+def run():
+    result = sweep()
+    rows = []
+    for load, cell in result["loads"].items():
+        for sched, m in cell.items():
+            rows.append(Row(
+                f"slo_overload/{load}/{sched}", m["p50_s"] * 1e6,
+                f"served={m['served']}/{m['requests']} "
+                f"p50={m['p50_s']:.3f}s p99={m['p99_s']:.3f}s "
+                f"miss_rate={m['miss_rate']:.2f} "
+                f"rejection_rate={m['rejection_rate']:.2f} "
+                f"preemptions={m['preemptions']}"))
+        f, s = cell["fifo"], cell["slo"]
+        rows.append(Row(
+            f"slo_overload/{load}/delta", 0.0,
+            f"miss_fifo={f['miss_rate']:.2f} miss_slo={s['miss_rate']:.2f} "
+            f"p99_fifo={f['p99_s']:.3f}s p99_slo={s['p99_s']:.3f}s"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast sweep (2x only) for CI artifacts")
+    ap.add_argument("--out", default="",
+                    help="write the sweep dict as JSON (BENCH_*.json)")
+    args = ap.parse_args(argv)
+    result = sweep(loads=(2.0,), duration_s=0.8) if args.smoke else sweep()
+    result["smoke"] = bool(args.smoke)
+    payload = json.dumps(result, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    print(payload)
+    return result
+
+
+if __name__ == "__main__":
+    main()

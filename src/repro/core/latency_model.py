@@ -18,7 +18,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -184,3 +184,44 @@ def profile_ops(op_suite: Dict[str, tuple], ratios=(0.0, 0.5, 1.0, 2.0, 4.0),
 
 def fit_latency_model(profile: dict, **gbt_kw) -> GBTRegressor:
     return GBTRegressor(**gbt_kw).fit(profile["x"], profile["y"])
+
+
+# ---------------------------------------------------------------------------
+# online per-batch cost estimator (SLO-aware serving)
+# ---------------------------------------------------------------------------
+
+class BatchLatencyEstimator:
+    """Per-model batch-execution-time estimate for the serving scheduler.
+
+    The SLO scheduler needs "how long will one batch of model m take?" to
+    order work by earliest-feasible-deadline, decide admission, and project
+    progress between preemption checkpoints. The estimate is an EWMA over
+    the durations the serving clock actually charged (so under ``SimClock``
+    with fixed per-model exec times the estimator converges to those exact
+    values after one observation — scheduling tests stay bit-reproducible),
+    seeded with ``priors`` / ``prior_s`` before the first observation.
+
+    A padded batch executes as one fused pass, so the estimate is
+    per-batch, not per-request; ``batch_size`` is recorded for
+    observability but does not scale the estimate.
+    """
+
+    def __init__(self, prior_s: float = 0.05, alpha: float = 0.5,
+                 priors: Optional[Dict[str, float]] = None):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.prior_s = float(prior_s)
+        self.alpha = float(alpha)
+        self._est: Dict[str, float] = {m: float(v)
+                                       for m, v in (priors or {}).items()}
+        self.observations: Dict[str, int] = {}
+
+    def observe(self, model: str, dt_s: float, batch_size: int = 1):
+        dt_s = float(dt_s)
+        if model in self._est and self.observations.get(model, 0) > 0:
+            self._est[model] += self.alpha * (dt_s - self._est[model])
+        else:
+            self._est[model] = dt_s          # first real sample wins the prior
+        self.observations[model] = self.observations.get(model, 0) + 1
+
+    def estimate(self, model: str, batch_size: int = 1) -> float:
+        return self._est.get(model, self.prior_s)

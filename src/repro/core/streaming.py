@@ -333,6 +333,23 @@ class _Loader(threading.Thread):
                     self.ready[w].set()
 
 
+@dataclass
+class ExecState:
+    """A paused or in-flight streaming run — everything ``advance`` needs
+    to pick up where the op loop left off. Holding one of these across a
+    preemption keeps the loader thread, its arrived chunks, and the pinned
+    cache entries alive, so resuming never re-streams resident bytes."""
+    tokens: Any
+    stats: RunStats
+    host_chunks: Dict[str, list]
+    dev: Dict[str, Any]
+    transient: Dict[str, int]
+    loader: "_Loader"
+    regs: Dict[str, Any]
+    op_idx: int = 0
+    done: bool = False
+
+
 class StreamingExecutor:
     """Runs a HostModel under an OverlapPlan with a real loader thread."""
 
@@ -371,7 +388,9 @@ class StreamingExecutor:
                 for lst in loader.arrived.values() for c in lst)
         return sum(int(v.nbytes) for v in dev.values()) + inflight
 
-    def run(self, tokens: np.ndarray) -> RunStats:
+    def begin(self, tokens: np.ndarray) -> ExecState:
+        """Preload phase + loader start: everything up to the op loop.
+        Returns the resumable run state ``advance`` consumes."""
         m, plan, cache, key = self.model, self.plan, self.cache, self.cache_key
         stats = RunStats(model=key)
         host_chunks = {w: chunk_rows(m.host_weights[w], plan.chunk_bytes)
@@ -412,63 +431,105 @@ class StreamingExecutor:
         loader.start()
 
         regs = {"tokens": jax.device_put(tokens)}
+        return ExecState(tokens=tokens, stats=stats, host_chunks=host_chunks,
+                         dev=dev, transient=transient, loader=loader,
+                         regs=regs)
+
+    def advance(self, st: ExecState,
+                should_yield: Optional[Callable[[int], bool]] = None) -> bool:
+        """Run ops from ``st.op_idx`` until the program completes (returns
+        True, ``st.done`` set, ``st.stats`` finalized) or ``should_yield``
+        fires at an op boundary (returns False; the run is PAUSED — the
+        loader thread stays parked at its gate, arrived chunks stay on
+        device, cache pins stay held, so a later ``advance`` resumes
+        without re-streaming anything already resident).
+
+        ``should_yield(op_idx)`` is consulted before each op except the
+        first of this call — every ``advance`` makes progress, so a
+        persistently-true callback cannot livelock the engine."""
+        m, cache, key = self.model, self.cache, self.cache_key
+        stats, dev, transient = st.stats, st.dev, st.transient
+        loader, host_chunks = st.loader, st.host_chunks
+        ops = m.graph.ops
+        entry_idx = st.op_idx
         t1 = time.perf_counter()
-        for op in m.graph.ops:
-            loader.allow_through(op.index)
-            warr = None
-            if op.weights:
-                wname = op.weights[0]
-                if wname not in dev:
-                    full = loader.assembled.get(wname) \
-                        if cache is not None else None
-                    if full is None:
-                        if not loader.ready[wname].is_set():
-                            stats.stall_events += 1
-                            loader.ready[wname].wait(timeout=60.0)
+        try:
+            while st.op_idx < len(ops):
+                if (should_yield is not None and st.op_idx > entry_idx
+                        and should_yield(st.op_idx)):
+                    return False
+                op = ops[st.op_idx]
+                loader.allow_through(op.index)
+                warr = None
+                if op.weights:
+                    wname = op.weights[0]
+                    if wname not in dev:
                         full = loader.assembled.get(wname) \
                             if cache is not None else None
-                    if full is None:
-                        with loader.lock:
-                            got = loader.arrived.pop(wname, [])
-                        if len(got) < len(host_chunks[wname]):   # plan miss
-                            for c in host_chunks[wname][len(got):]:
-                                got.append((jax.device_put(c[0]), float(c[1]))
-                                           if isinstance(c, tuple)
-                                           else jax.device_put(c))
-                        got = [g[0].astype(jnp.float32) * g[1]
-                               if isinstance(g, tuple) else g for g in got]
-                        full = got[0] if len(got) == 1 else \
-                            jnp.concatenate(got, axis=0)
-                        if cache is not None:
-                            # chunk entries are consumed into the assembled
-                            # weight; re-key so future runs hit it whole
-                            for ci in range(len(host_chunks[wname])):
-                                cache.remove((key, wname, ci))
+                        if full is None:
+                            if not loader.ready[wname].is_set():
+                                stats.stall_events += 1
+                                loader.ready[wname].wait(timeout=60.0)
+                            full = loader.assembled.get(wname) \
+                                if cache is not None else None
+                        if full is None:
                             with loader.lock:
-                                loader.uncached_bytes.pop(wname, None)
-                            if not cache.put((key, wname, "w"), full,
-                                             int(full.nbytes), pin=True):
-                                transient[wname] = int(full.nbytes)
-                    dev[wname] = full
-                warr = dev[wname]
-            regs = m.programs[op_tag(op.name)](regs, warr)
-            for wname in op.weights:
-                if self.last_use[wname] <= op.index:
-                    dev.pop(wname, None)
-                    if cache is not None:
-                        cache.release((key, wname, "w"))
-                        transient.pop(wname, None)
-            stats.residency.append(self._residency(dev, loader, transient))
-        jax.tree.map(lambda x: x.block_until_ready()
-                     if hasattr(x, "block_until_ready") else x, regs)
-        stats.exec_s = time.perf_counter() - t1
+                                got = loader.arrived.pop(wname, [])
+                            if len(got) < len(host_chunks[wname]):  # plan miss
+                                for c in host_chunks[wname][len(got):]:
+                                    got.append(
+                                        (jax.device_put(c[0]), float(c[1]))
+                                        if isinstance(c, tuple)
+                                        else jax.device_put(c))
+                            got = [g[0].astype(jnp.float32) * g[1]
+                                   if isinstance(g, tuple) else g for g in got]
+                            full = got[0] if len(got) == 1 else \
+                                jnp.concatenate(got, axis=0)
+                            if cache is not None:
+                                # chunk entries are consumed into the
+                                # assembled weight; re-key so future runs
+                                # hit it whole
+                                for ci in range(len(host_chunks[wname])):
+                                    cache.remove((key, wname, ci))
+                                with loader.lock:
+                                    loader.uncached_bytes.pop(wname, None)
+                                if not cache.put((key, wname, "w"), full,
+                                                 int(full.nbytes), pin=True):
+                                    transient[wname] = int(full.nbytes)
+                        dev[wname] = full
+                    warr = dev[wname]
+                st.regs = m.programs[op_tag(op.name)](st.regs, warr)
+                for wname in op.weights:
+                    if self.last_use[wname] <= op.index:
+                        dev.pop(wname, None)
+                        if cache is not None:
+                            cache.release((key, wname, "w"))
+                            transient.pop(wname, None)
+                stats.residency.append(
+                    self._residency(dev, loader, transient))
+                st.op_idx += 1
+            # final segment: the device sync belongs in the timed region —
+            # the op loop largely enqueues async work, so exec_s must cover
+            # actual execution, not just dispatch (pre-refactor semantics)
+            jax.tree.map(lambda x: x.block_until_ready()
+                         if hasattr(x, "block_until_ready") else x, st.regs)
+        finally:
+            stats.exec_s += time.perf_counter() - t1
         loader.join(timeout=10.0)
         stats.cache_hits += loader.hits
         stats.cache_misses += loader.misses
         stats.peak_bytes = max(stats.residency, default=0)
-        stats.avg_bytes = float(np.mean(stats.residency)) if stats.residency else 0
-        stats.result = regs.get("h", regs.get("x"))
-        return stats
+        stats.avg_bytes = float(np.mean(stats.residency)) \
+            if stats.residency else 0
+        stats.result = st.regs.get("h", st.regs.get("x"))
+        st.done = True
+        return True
+
+    def run(self, tokens: np.ndarray) -> RunStats:
+        """One-shot, non-preemptible execution (the pre-PR entry point)."""
+        st = self.begin(tokens)
+        self.advance(st)
+        return st.stats
 
 
 class PreloadExecutor:

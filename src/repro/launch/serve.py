@@ -15,6 +15,16 @@ prefetch), with per-request arrival→completion latencies:
 
 ``--eviction`` picks the shared pool's policy: ``lru`` or ``cost``
 (cheapest-to-restream first, à la Demand Layering).
+
+SLO mode — same loop under deadline scheduling: every request gets a
+deadline of ``arrival + --slo-ms``, runnable work is ordered earliest-
+feasible-deadline first (exec estimate + cold-chunk restream cost), long
+batches yield to tighter deadlines at op boundaries, and infeasible
+requests are rejected up front instead of inflating tail latency:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models gptneo-s,gptneo-s --online --scheduler slo --slo-ms 250 \
+        --rate 8 --duration 2 --budget-mb 256
 """
 from __future__ import annotations
 
@@ -24,11 +34,13 @@ from dataclasses import replace
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.streaming import HostModel
+from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.stream import RequestStream, poisson_trace
+from repro.serving.types import (SLOConfig, deadline_miss_rate,
+                                 rejection_rate)
 
 
 def main(argv=None):
@@ -51,8 +63,14 @@ def main(argv=None):
                     help="online: per-model arrival rate (req/s, virtual)")
     ap.add_argument("--duration", type=float, default=2.0,
                     help="online: trace duration (virtual seconds)")
-    ap.add_argument("--scheduler", choices=["arrival", "static"],
-                    default="arrival", help="online: run/prefetch picking")
+    ap.add_argument("--scheduler",
+                    choices=["fifo", "arrival", "static", "slo"],
+                    default="fifo", help="online: run/prefetch picking "
+                    "(fifo = arrival-order; slo = earliest-feasible-"
+                    "deadline with preemption + admission control)")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="online: per-request latency SLO (deadline = "
+                    "arrival + slo; used by --scheduler slo)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     args = ap.parse_args(argv)
@@ -75,24 +93,44 @@ def main(argv=None):
         trace = poisson_trace({n: args.rate for n in engine.models},
                               args.duration, vocab=vocab, seq=args.seq,
                               seed=0)
+        # warm the jitted kernels first: the loop charges measured real
+        # durations, and a first-call compile would otherwise poison both
+        # the latency report and the SLO cost estimates
+        for m in engine.models.values():
+            PreloadExecutor(m).run(rng.integers(0, m.cfg.vocab,
+                                                (1, args.seq),
+                                                dtype=np.int32))
         # virtual arrival timeline + measured real execution charges
         clock = SimClock()
+        slo = SLOConfig(default_slo_s=args.slo_ms / 1e3) \
+            if args.scheduler == "slo" else None
         responses = engine.serve(
             RequestStream.from_trace(trace), clock=clock,
-            scheduler=args.scheduler,
+            scheduler=args.scheduler, slo=slo,
             batcher=BatcherConfig(max_batch=args.max_batch,
                                   max_wait_s=args.max_wait_ms / 1e3))
         for r in responses:
+            if r.status == "rejected":
+                print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "
+                      f"REJECTED (deadline {r.deadline_s:.3f}s infeasible)")
+                continue
             print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "
                   f"queue {r.queue_s:6.3f}s latency {r.latency_s:6.3f}s "
                   f"batch={r.batch_size}")
-        lats = [r.latency_s for r in responses]
-        print(f"ONLINE {len(responses)} requests "
-              f"({len(engine.batch_log)} batches) "
-              f"mean latency {np.mean(lats):.3f}s "
-              f"p95 {np.percentile(lats, 95):.3f}s "
-              f"pool hit rate {engine.cache_hit_rate():.2f} "
-              f"scheduler={args.scheduler} eviction={args.eviction}")
+        served = [r for r in responses if r.status == "ok"]
+        lats = [r.latency_s for r in served] or [float("nan")]
+        line = (f"ONLINE {len(served)}/{len(responses)} requests served "
+                f"({len(engine.batch_log)} batches) "
+                f"mean latency {np.mean(lats):.3f}s "
+                f"p95 {np.percentile(lats, 95):.3f}s "
+                f"pool hit rate {engine.cache_hit_rate():.2f} "
+                f"scheduler={args.scheduler} eviction={args.eviction}")
+        if slo is not None:
+            line += (f" slo={args.slo_ms:.0f}ms "
+                     f"miss_rate={deadline_miss_rate(responses):.2f} "
+                     f"rejection_rate={rejection_rate(responses):.2f} "
+                     f"preemptions={len(engine.preempt_log)}")
+        print(line)
         return responses, engine
 
     keys = list(engine.models)

@@ -13,6 +13,7 @@ compare exactly against per-request preload references.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Tuple
 
@@ -44,6 +45,14 @@ class Batch:
     @property
     def size(self) -> int:
         return len(self.requests)
+
+    @property
+    def deadline_s(self) -> float:
+        """The batch's effective deadline: the tightest member deadline
+        (the whole fused execution must land by then), +inf when no member
+        carries one — what the engine's preemption check compares against."""
+        ds = [r.deadline_s for r in self.requests if r.deadline_s is not None]
+        return min(ds) if ds else math.inf
 
 
 def make_batch(group: List[Request], cfg: BatcherConfig) -> Batch:

@@ -29,7 +29,7 @@ class MonotonicClock:
         if dt > 0:
             time.sleep(dt)
 
-    def tick(self, real_dt: float, model: str = "") -> float:
+    def tick(self, real_dt: float, model: str = "", frac: float = 1.0) -> float:
         return real_dt
 
 
@@ -61,12 +61,17 @@ class SimClock:
     def advance(self, dt: float):
         self._t += max(0.0, dt)
 
-    def tick(self, real_dt: float, model: str = "") -> float:
+    def tick(self, real_dt: float, model: str = "", frac: float = 1.0) -> float:
+        """Charge one executed batch — or, with ``frac`` < 1, the fraction
+        of it that ran before a preemption checkpoint. Fixed/per-model
+        ``exec_time`` charges scale by ``frac`` so a batch split into
+        segments charges exactly one batch's worth in total; measured real
+        durations (``exec_time=None``) are already per-segment."""
         if self.exec_time is None:
             dt = real_dt
         elif callable(self.exec_time):
-            dt = float(self.exec_time(model))
+            dt = float(self.exec_time(model)) * frac
         else:
-            dt = float(self.exec_time)
+            dt = float(self.exec_time) * frac
         self._t += max(0.0, dt)
         return dt

@@ -38,6 +38,23 @@ Pool eviction is pluggable (``eviction="lru" | "cost"``): LRU, or
 cheapest-to-restream-first (restream bytes / disk bandwidth, à la Demand
 Layering) — threaded through to ``WeightCache``.
 
+SLO-aware serving (PR 3) sits on top of the online loop:
+
+  * ``scheduler="slo"`` orders runnable queues by earliest-FEASIBLE-
+    deadline: a head's urgency is its deadline minus the per-batch exec
+    estimate (``BatchLatencyEstimator`` EWMA over clock-charged durations)
+    minus the pool's restream cost for the model's cold chunks — so "which
+    model runs next" accounts for weight-loading time, not just compute;
+  * long batches are preemptible at op (chunk-schedule) boundaries: the
+    running ``StreamingExecutor`` yields when a waiting queue would
+    otherwise miss a strictly-earlier deadline, and the suspended run's
+    loader thread, arrived chunks, and cache pins survive the preemption,
+    so resuming never re-streams already-resident bytes;
+  * an admission controller rejects arrivals whose deadlines are
+    infeasible given queue depth (and sheds queue heads that became
+    hopeless), returning explicit ``Response(status="rejected")`` instead
+    of silently inflating tail latency.
+
 Two execution policies:
   * "stream"  — FlashMem: per-model OverlapPlans, chunks checked in/out of
     the shared pool, freed at last use.
@@ -51,29 +68,63 @@ pool; pass ``interleave=`` explicitly to override either way).
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.capacity import HWSpec, capacities
+from repro.core.latency_model import BatchLatencyEstimator
 from repro.core.opg import OPGProblem
 from repro.core.plan import MultiModelPlan, OverlapPlan, plan_multi_model
 from repro.core.solver import SolverConfig, solve
-from repro.core.streaming import (HostModel, PreloadExecutor, RunStats,
-                                  StreamingExecutor, chunk_rows)
-from repro.serving.batcher import (BatcherConfig, can_join, make_batch,
+from repro.core.streaming import (ExecState, HostModel, PreloadExecutor,
+                                  RunStats, StreamingExecutor, chunk_rows)
+from repro.serving.batcher import (Batch, BatcherConfig, can_join, make_batch,
                                    split_batch_result)
 from repro.serving.clock import MonotonicClock
 from repro.serving.stream import RequestStream
-from repro.serving.types import Request, Response
+from repro.serving.types import Request, Response, SLOConfig
 from repro.serving.weight_cache import WeightCache
 
-__all__ = ["Request", "Response", "ModelReport", "ServingEngine"]
+__all__ = ["Request", "Response", "SLOConfig", "ModelReport",
+           "ServingEngine"]
+
+SCHEDULERS = ("fifo", "arrival", "static", "slo")   # "arrival" = fifo alias
+
+
+@dataclass
+class _RunningBatch:
+    """One (possibly preempted-and-resumed) batch execution in serve().
+
+    Carries the resumable executor state across a preemption plus the
+    scheduling facts the engine needs to decide when to resume it: the
+    tightest member deadline and how much of its estimated execution
+    remains."""
+    name: str
+    batch: Batch
+    n_ops: int
+    deadline_s: float = math.inf
+    state: Optional[ExecState] = None
+    t_start: float = 0.0
+    started: bool = False
+    charged_s: float = 0.0          # virtual seconds ticked so far
+
+    def remaining_s(self, cost: BatchLatencyEstimator) -> float:
+        if self.state is None:
+            return cost.estimate(self.name)
+        left = max(0, self.n_ops - self.state.op_idx)
+        return cost.estimate(self.name) * left / max(self.n_ops, 1)
+
+    def effective_deadline(self, cost: BatchLatencyEstimator) -> float:
+        """Latest virtual time the remaining work can start and still meet
+        the batch deadline — the EDF key a suspended run competes with."""
+        return self.deadline_s - self.remaining_s(cost)
 
 
 @dataclass
@@ -129,6 +180,12 @@ class ServingEngine:
         self.idle_log: List[tuple] = []       # (t, next_arrival)
         self.batch_log: List[tuple] = []      # (t, model, batch_size)
         self.rejected: List[Request] = []     # arrivals for unknown models
+        # SLO-loop observability: every admission decision against a
+        # deadline and every preemption point — scenario-test ground truth
+        self.admission_log: List[tuple] = []  # (t, model, eta, deadline, kind)
+        self.preempt_log: List[tuple] = []    # (t, model, op_idx)
+        self.cost_model: Optional[BatchLatencyEstimator] = None
+        self._model_bytes_total: Dict[str, int] = {}
         self._executors: Dict[str, object] = {}
         self._protected: Dict[str, List[tuple]] = {}
         self._planned = False
@@ -137,6 +194,7 @@ class ServingEngine:
     def register(self, name: str, model: HostModel):
         self.models[name] = model
         self._planned = False
+        self._model_bytes_total.pop(name, None)
         # re-planning replaces EVERY model's plan (the budget is shared),
         # so every cached executor is stale, not just this model's
         self._executors.clear()
@@ -204,14 +262,37 @@ class ServingEngine:
             return order.index(name)
         return (order.index(name) - order.index(last) - 1) % len(order)
 
+    def _restream_cost_s(self, name: str) -> float:
+        """Seconds of storage streaming `name` needs before it can execute
+        at full speed: bytes of its weights NOT resident in the shared pool
+        over disk bandwidth. The slo scheduler folds this into urgency, so
+        "which model runs next" accounts for weight-loading time — a cold
+        model must start earlier than a warm one to make the same deadline
+        (Demand Layering's deadline-aware pipelined loading)."""
+        if self.cache is None or self.disk_bw <= 0:
+            return 0.0
+        total = self._model_bytes_total.get(name)
+        if total is None:
+            total = sum(a.nbytes
+                        for a in self.models[name].host_weights.values())
+            self._model_bytes_total[name] = total
+        return max(0, total - self.cache.model_bytes(name)) / self.disk_bw
+
     def _pick_next_model(self, pending: Dict[str, Deque[Request]],
                          last: Optional[str],
-                         scheduler: str = "arrival") -> Optional[str]:
+                         scheduler: str = "arrival",
+                         urgency: Optional[Callable[[str], float]] = None
+                         ) -> Optional[str]:
         """Next model to RUN.
 
-        * "arrival" — the model whose head request has waited longest
-          (earliest arrival = global cross-model FIFO, which is starvation-
-          free under skewed rates); ties rotate round-robin after `last`.
+        * "fifo" / "arrival" — the model whose head request has waited
+          longest (earliest arrival = global cross-model FIFO, which is
+          starvation-free under skewed rates); ties rotate round-robin
+          after `last`.
+        * "slo" — earliest-feasible-deadline first: ``urgency(name)`` is
+          the latest virtual time the head's work can start and still meet
+          its deadline (deadline − exec estimate − restream cost for cold
+          chunks); deadline-less heads sort last and fall back to FIFO.
         * "static" — the pre-PR interleave: rotate registration order after
           `last`, first non-empty queue wins, arrival times ignored."""
         names = [n for n, q in pending.items() if q]
@@ -219,21 +300,29 @@ class ServingEngine:
             return None
         if scheduler == "static":
             return min(names, key=lambda n: self._rr_distance(n, last))
+        if scheduler == "slo" and urgency is not None:
+            return min(names, key=lambda n: (urgency(n),
+                                             pending[n][0].arrival_s,
+                                             self._rr_distance(n, last)))
         return min(names, key=lambda n: (pending[n][0].arrival_s,
                                          self._rr_distance(n, last)))
 
     def _pick_prefetch_target(self, pending: Dict[str, Deque[Request]],
                               stream: Optional[RequestStream],
                               current: str,
-                              scheduler: str = "arrival"
+                              scheduler: str = "arrival",
+                              urgency: Optional[Callable[[str], float]] = None
                               ) -> Tuple[Optional[str], bool]:
         """Next model to PREFETCH while `current` executes.
 
-        * "arrival" — from actual queue state: the queued model whose head
-          has waited longest (depth breaks ties — a deeper queue is the
-          likelier next run under batching). With no other queue non-empty,
-          fall back to the trace's upcoming arrivals (speculative warm;
-          shallow lookahead).
+        * "fifo" / "arrival" — from actual queue state: the queued model
+          whose head has waited longest (depth breaks ties — a deeper queue
+          is the likelier next run under batching). With no other queue
+          non-empty, fall back to the trace's upcoming arrivals
+          (speculative warm; shallow lookahead).
+        * "slo" — the most deadline-urgent queued model: warming the model
+          the EDF pick will run next shrinks exactly the restream time its
+          feasibility hinges on. Speculative fallback as above.
         * "static" — next non-empty queue in registration rotation after
           `current`, blind to arrivals and depths (the pre-PR keying that
           bursty traffic invalidates)."""
@@ -242,9 +331,14 @@ class ServingEngine:
             if scheduler == "static":
                 return min(cands,
                            key=lambda n: self._rr_distance(n, current)), False
+            if scheduler == "slo" and urgency is not None:
+                return min(cands,
+                           key=lambda n: (urgency(n),
+                                          pending[n][0].arrival_s,
+                                          -len(pending[n]))), False
             return min(cands, key=lambda n: (pending[n][0].arrival_s,
                                              -len(pending[n]))), False
-        if scheduler == "arrival" and stream is not None:
+        if scheduler != "static" and stream is not None:
             for r in stream.peek_upcoming():
                 if r.model != current and r.model in self.models:
                     return r.model, True
@@ -417,7 +511,12 @@ class ServingEngine:
               clock=None, batcher: Optional[BatcherConfig] = None,
               scheduler: str = "arrival",
               poll_interval_s: float = 0.001,
-              speculative_lookahead_ops: int = 8) -> List[Response]:
+              speculative_lookahead_ops: int = 8,
+              slo: Optional[SLOConfig] = None,
+              admission: Optional[bool] = None,
+              preempt: Optional[bool] = None,
+              cost_model: Optional[BatchLatencyEstimator] = None
+              ) -> List[Response]:
         """Continuous arrival-aware loop: serve a live ``RequestStream``
         until it is closed and drained. Same-model arrivals inside the
         batcher window coalesce into one padded execution; responses are
@@ -425,26 +524,122 @@ class ServingEngine:
 
         ``clock`` is the injectable time source (default: real time). With
         a ``SimClock`` and a trace stream the loop — including every
-        prefetch decision in ``prefetch_log`` — is fully deterministic.
-        ``scheduler`` selects run/prefetch-target picking: "arrival"
-        (queue-depth + arrival-time aware) or "static" (the pre-PR
-        registration-order interleave, kept for A/B benchmarking)."""
-        assert scheduler in ("arrival", "static"), scheduler
+        prefetch, admission, and preemption decision in the logs — is
+        fully deterministic.
+
+        ``scheduler`` selects run/prefetch-target picking:
+          * "fifo" (alias "arrival") — global cross-model FIFO over queue
+            heads (queue-depth + arrival-time aware prefetch);
+          * "slo" — earliest-feasible-deadline first: each queue head's
+            urgency is its deadline minus the per-batch exec estimate
+            (``cost_model``, EWMA over ticked durations) minus the pool's
+            restream cost for its cold chunks;
+          * "static" — the pre-PR registration-order interleave, kept for
+            A/B benchmarking.
+
+        ``slo`` derives deadlines for requests that don't carry one
+        (``arrival + slo_for(model)``); requests stay deadline-less when
+        it's None. ``admission`` (default: on for "slo") rejects requests
+        whose deadline is infeasible given current queue depth — and sheds
+        queue heads that became hopeless — returning explicit
+        ``Response(status="rejected")`` instead of silently inflating tail
+        latency. ``preempt`` (default: on for "slo" under the stream
+        policy) lets a running batch yield at an op boundary when a
+        waiting queue would otherwise miss a strictly-earlier deadline;
+        the suspended run keeps its loader, arrived chunks, and cache pins,
+        so resuming never re-streams resident bytes."""
+        if scheduler not in SCHEDULERS:
+            # a real error, not an assert: under `python -O` a stripped
+            # assert would silently fall through to fifo scheduling
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             f"expected one of {SCHEDULERS}")
+        sched = "fifo" if scheduler == "arrival" else scheduler
         self._ensure_planned()
         clock = clock or MonotonicClock()
+        if admission is None:
+            admission = sched == "slo"
+        if preempt is None:
+            preempt = sched == "slo" and self.policy == "stream"
+        cost = cost_model or BatchLatencyEstimator()
+        self.cost_model = cost
         pending: Dict[str, Deque[Request]] = {n: deque() for n in self.models}
         out: List[Response] = []
         last: Optional[str] = None
+        suspended: Optional[_RunningBatch] = None   # single preemption slot
+        max_b = batcher.max_batch if batcher is not None else 1
+
+        # deadlines derived from the SLOConfig live in a serve-local map —
+        # caller-owned Request objects are never mutated, so replaying the
+        # same trace under a different SLOConfig derives fresh deadlines
+        derived: Dict[int, float] = {}
+
+        def deadline_of(r: Request) -> float:
+            if r.deadline_s is not None:
+                return r.deadline_s
+            d = derived.get(id(r))
+            if d is None:
+                d = slo.deadline_for(r) if slo is not None else math.inf
+                derived[id(r)] = d
+            return d
+
+        def urgency(name: str) -> float:
+            # latest feasible start for this queue's head: deadline minus
+            # compute estimate minus cold-chunk restream time
+            return (deadline_of(pending[name][0]) - cost.estimate(name)
+                    - self._restream_cost_s(name))
+
+        def backlog_before(d: float) -> float:
+            """Estimated seconds of queued+suspended work that will run
+            BEFORE a request with deadline ``d``. Under EDF only earlier-
+            or-equal deadlines go first; under fifo/static everything
+            already queued does."""
+            s = 0.0
+            if suspended is not None and (sched != "slo"
+                                          or suspended.deadline_s <= d):
+                s += suspended.remaining_s(cost)
+            for n, q in pending.items():
+                if not q:
+                    continue
+                ahead = len(q) if sched != "slo" else \
+                    sum(1 for r2 in q if deadline_of(r2) <= d)
+                s += cost.estimate(n) * math.ceil(ahead / max_b)
+            return s
+
+        def reject(r: Request, now: float, eta: float, kind: str):
+            d = deadline_of(r)
+            derived.pop(id(r), None)      # r leaves the loop: drop its entry
+            self.admission_log.append((now, r.model, eta, d, kind))
+            out.append(Response(r.model, max(0.0, now - r.arrival_s),
+                                0.0, 0.0, 0, status="rejected",
+                                arrival_s=r.arrival_s, deadline_s=d))
+
+        def admit(r: Request, now: float, in_flight_s: float = 0.0,
+                  in_flight_deadline: float = math.inf):
+            if r.model not in self.models:
+                # never let one bad request crash the loop and strand
+                # everything queued behind it
+                self.rejected.append(r)
+                return
+            d = deadline_of(r)
+            if admission and math.isfinite(d):
+                # the in-flight batch delays r only if it finishes first
+                # (earlier-or-equal deadline) or cannot be preempted —
+                # otherwise EDF yields to r at the next op boundary
+                blocking = in_flight_s if (not preempt
+                                           or in_flight_deadline <= d) else 0.0
+                eta = (now + blocking + backlog_before(d)
+                       + cost.estimate(r.model)
+                       + self._restream_cost_s(r.model))
+                if eta > d + 1e-9:
+                    reject(r, now, eta, "infeasible")
+                    return
+            pending[r.model].append(r)
+
         while True:
             now = clock.now()
             for r in stream.poll(now):
-                if r.model not in self.models:
-                    # never let one bad request crash the loop and strand
-                    # everything queued behind it
-                    self.rejected.append(r)
-                    continue
-                pending.setdefault(r.model, deque()).append(r)
-            if not any(pending.values()):
+                admit(r, now)
+            if not any(pending.values()) and suspended is None:
                 if stream.exhausted:
                     break
                 nxt_arrival = stream.next_arrival()
@@ -461,27 +656,109 @@ class ServingEngine:
                     self.idle_log.append((now, None))
                     clock.sleep(poll_interval_s)
                 continue
-            name = self._pick_next_model(pending, last, scheduler)
-            group = self._take_group(pending[name], batcher)
-            batch = make_batch(group, batcher or BatcherConfig())
+            urg = urgency if sched == "slo" else None
+            name = self._pick_next_model(pending, last, sched, urg)
+            if suspended is not None and (
+                    name is None
+                    or suspended.effective_deadline(cost) <= urgency(name)):
+                # EDF says the suspended run's remaining work goes next
+                item, suspended = suspended, None
+                name = item.name
+            else:
+                q = pending[name]
+                if admission:
+                    # shed heads whose deadline became hopeless while they
+                    # queued — an explicit rejection beats a guaranteed miss
+                    while q:
+                        d = deadline_of(q[0])
+                        eta = (now + cost.estimate(name)
+                               + self._restream_cost_s(name))
+                        if math.isfinite(d) and eta > d + 1e-9:
+                            reject(q.popleft(), now, eta, "shed")
+                        else:
+                            break
+                    if not q:
+                        continue
+                group = self._take_group(q, batcher)
+                batch = make_batch(group, batcher or BatcherConfig())
+                item = _RunningBatch(
+                    name=name, batch=batch,
+                    n_ops=len(self.models[name].graph.ops),
+                    # the whole fused execution must land by the tightest
+                    # member deadline (resolved through the SLO config)
+                    deadline_s=min(deadline_of(r) for r in batch.requests))
             prefetcher = pf_stop = None
             target, speculative = self._pick_prefetch_target(
-                pending, stream, name, scheduler)
+                pending, stream, name, sched, urg)
             if self.prefetch and target is not None and target != name:
                 self.prefetch_log.append((now, name, target, speculative))
                 prefetcher, pf_stop = self._start_prefetch(
                     target, name,
                     lookahead_ops=speculative_lookahead_ops if speculative
                     else None)
-            t0 = clock.now()
-            self.batch_log.append((t0, name, batch.size))
-            t0_real = time.perf_counter()
-            stats = self._executor(name).run(batch.tokens)
-            real_dt = time.perf_counter() - t0_real
-            clock.tick(real_dt, name)
-            dt = clock.now() - t0
+            if not item.started:
+                item.t_start = clock.now()
+                self.batch_log.append((item.t_start, name, item.batch.size))
+                item.started = True
+            yield_check = None
+            if preempt and suspended is None and self.policy == "stream":
+                seg_v0 = clock.now()
+                est_total = cost.estimate(name)
+                n_ops, batch_deadline = item.n_ops, item.deadline_s
+                seg_entry_idx = item.state.op_idx if item.state else 0
+
+                def yield_check(ops_done, _v0=seg_v0, _e=est_total,
+                                _n=n_ops, _d=batch_deadline,
+                                _i0=seg_entry_idx):
+                    # projected virtual time at this op boundary: the clock
+                    # only ticks at segment end, so progress is prorated
+                    # from the cost estimate (exact under SimClock once the
+                    # estimator has one observation)
+                    projected = _v0 + _e * (ops_done - _i0) / max(_n, 1)
+                    remaining = _e * max(0, _n - ops_done) / max(_n, 1)
+                    for r in stream.poll(projected):
+                        admit(r, projected, in_flight_s=remaining,
+                              in_flight_deadline=_d)
+                    cands = [n for n, qq in pending.items() if qq]
+                    if not cands:
+                        return False
+                    best = min(cands, key=urgency)
+                    d_best = deadline_of(pending[best][0])
+                    if not math.isfinite(d_best):
+                        return False
+                    setup = (cost.estimate(best)
+                             + self._restream_cost_s(best))
+                    waiting_misses = (projected + remaining + setup
+                                      > d_best + 1e-9)
+                    # yield only to a strictly earlier deadline that cannot
+                    # wait this batch out — never ping-pong between equals
+                    return waiting_misses and d_best < _d
+            ex = self._executor(name)
+            seg_real_t0 = time.perf_counter()
+            if isinstance(ex, StreamingExecutor):
+                if item.state is None:
+                    item.state = ex.begin(item.batch.tokens)
+                ops_before = item.state.op_idx
+                done = ex.advance(item.state, yield_check)
+                frac = ((item.state.op_idx - ops_before)
+                        / max(item.n_ops, 1))
+                stats = item.state.stats
+            else:                    # preload executor: never preemptible
+                stats = ex.run(item.batch.tokens)
+                done, frac = True, 1.0
+            seg_real = time.perf_counter() - seg_real_t0
+            item.charged_s += clock.tick(seg_real, name, frac=frac)
             self._stop_prefetch(prefetcher, pf_stop)
+            if not done:
+                self.preempt_log.append((clock.now(), name,
+                                         item.state.op_idx))
+                suspended = item
+                last = name
+                continue
             self._release_protection(name)
+            cost.observe(name, item.charged_s, item.batch.size)
+            batch, t0 = item.batch, item.t_start
+            dt = clock.now() - t0
             result, stats.result = stats.result, None
             stats.requests = batch.size     # model_report counts requests,
             self.stats_log.append(stats)    # not executed batches
@@ -493,6 +770,8 @@ class ServingEngine:
                                 split_batch_result(batch, result)
                                 if result is not None
                                 else [None] * batch.size):
+                d = deadline_of(req)
+                derived.pop(id(req), None)
                 out.append(Response(
                     name, finish - req.arrival_s, stats.init_s, stats.exec_s,
                     stats.peak_bytes, avg_bytes=stats.avg_bytes,
@@ -501,7 +780,8 @@ class ServingEngine:
                     cache_hit_rate=stats.cache_hit_rate, result=res,
                     arrival_s=req.arrival_s,
                     queue_s=max(0.0, t0 - req.arrival_s),
-                    batch_size=batch.size))
+                    batch_size=batch.size,
+                    deadline_s=d if math.isfinite(d) else req.deadline_s))
             last = name
         return out
 

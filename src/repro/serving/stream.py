@@ -48,11 +48,17 @@ class RequestStream:
         return RequestStream(requests, closed=True)
 
     def push(self, req: Request):
+        # a real error, not an assert: pushing to a closed stream is a
+        # producer bug that must surface under `python -O` too (asserts
+        # are stripped there and the request would vanish silently)
         with self._lock:
-            assert not self._closed, "stream is closed"
+            if self._closed:
+                raise RuntimeError("push on closed RequestStream")
             heapq.heappush(self._heap, (req.arrival_s, next(self._seq), req))
 
     def close(self):
+        """Idempotent: closing an already-closed stream is a no-op (several
+        producers may all signal end-of-trace)."""
         with self._lock:
             self._closed = True
 

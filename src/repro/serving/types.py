@@ -3,11 +3,23 @@
 Kept free of engine imports so ``serving/batcher.py`` and
 ``serving/stream.py`` can build on ``Request`` without a cycle through
 ``serving/engine.py`` (which imports both).
+
+SLO machinery (PR 3): a ``Request`` may carry an explicit ``deadline_s``
+on the serving clock's timeline; when it does not, the engine derives one
+from the per-model ``SLOConfig`` (``arrival + slo``). A ``Response``
+reports whether its request was served (``status="ok"``) or refused by
+the admission controller (``status="rejected"``) — shedding infeasible
+work is an explicit, observable outcome instead of silent tail-latency
+inflation. ``deadline_miss_rate`` / ``rejection_rate`` are the shared
+metric reductions the benchmarks and scenario tests both use, so A/B
+numbers always mean the same thing.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 
@@ -17,6 +29,9 @@ class Request:
     model: str
     tokens: np.ndarray
     arrival_s: float = field(default_factory=time.perf_counter)
+    # absolute completion deadline on the serving clock (None = derive from
+    # the engine's SLOConfig, or "no deadline" when no SLO is configured)
+    deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -36,3 +51,59 @@ class Response:
     arrival_s: float = 0.0
     queue_s: float = 0.0
     batch_size: int = 1
+    # SLO fields: "ok" = served; "rejected" = the admission controller
+    # refused the request (result is None, latency_s is time-to-decision)
+    status: str = "ok"
+    deadline_s: Optional[float] = None
+
+    @property
+    def finish_s(self) -> float:
+        """Completion time on the serving clock (arrival + latency)."""
+        return self.arrival_s + self.latency_s
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """True/False against the deadline; None when there was no deadline
+        or the request was never served (rejected)."""
+        if self.deadline_s is None or not math.isfinite(self.deadline_s) \
+                or self.status != "ok":
+            return None
+        return self.finish_s <= self.deadline_s + 1e-9
+
+
+@dataclass
+class SLOConfig:
+    """Per-model latency SLOs: a request's default deadline is
+    ``arrival_s + slo_for(model)``. ``per_model`` overrides the default
+    for individual models (e.g. an interactive ASR model with a tighter
+    bound than a background summarizer)."""
+    default_slo_s: float = 0.25
+    per_model: Dict[str, float] = field(default_factory=dict)
+
+    def slo_for(self, model: str) -> float:
+        return self.per_model.get(model, self.default_slo_s)
+
+    def deadline_for(self, req: Request) -> float:
+        return req.arrival_s + self.slo_for(req.model)
+
+
+# ---------------------------------------------------------------------------
+# shared SLO metric reductions (benchmarks + scenario tests)
+# ---------------------------------------------------------------------------
+
+def deadline_miss_rate(responses: Iterable[Response]) -> float:
+    """Fraction of SERVED deadlined requests that finished late. Rejected
+    requests are not misses — rejection is the explicit alternative the
+    admission controller offers — and deadline-less requests can't miss."""
+    judged = [r.deadline_met for r in responses if r.deadline_met is not None]
+    if not judged:
+        return 0.0
+    return sum(1 for met in judged if not met) / len(judged)
+
+
+def rejection_rate(responses: Iterable[Response]) -> float:
+    """Fraction of all responses the admission controller refused."""
+    rs = list(responses)
+    if not rs:
+        return 0.0
+    return sum(1 for r in rs if r.status == "rejected") / len(rs)

@@ -116,6 +116,10 @@ class WeightCache:
         self._lock = threading.RLock()
         self.stats = CacheStats()
         self._model_stats: Dict[str, CacheStats] = {}
+        # per-model resident bytes, maintained incrementally: the serving
+        # scheduler probes model_bytes() per queue at every preemption
+        # checkpoint, which must not rescan the whole pool under the lock
+        self._model_bytes: Dict[str, int] = {}
 
     # -- internals ---------------------------------------------------------
     @staticmethod
@@ -124,6 +128,10 @@ class WeightCache:
 
     def _mstats(self, key: Tuple) -> CacheStats:
         return self._model_stats.setdefault(self._model_of(key), CacheStats())
+
+    def _bump_model_bytes(self, key: Tuple, delta: int):
+        m = self._model_of(key)
+        self._model_bytes[m] = self._model_bytes.get(m, 0) + delta
 
     def _pick_victim(self) -> Optional[Tuple]:
         if self.policy == "cost":
@@ -150,6 +158,7 @@ class WeightCache:
                 return False
             e = self._entries.pop(victim)
             self._used -= e.nbytes
+            self._bump_model_bytes(victim, -e.nbytes)
             self.stats.evictions += 1
             self.stats.evicted_bytes += e.nbytes
             self.stats.evicted_restream_bytes += e.restream_bytes
@@ -190,17 +199,20 @@ class WeightCache:
             old = self._entries.pop(key, None)
             if old is not None:
                 self._used -= old.nbytes
+                self._bump_model_bytes(key, -old.nbytes)
             if not self._evict_until(nbytes):
                 self.stats.rejected_puts += 1
                 ms.rejected_puts += 1
                 if old is not None:                 # restore at MRU position
                     self._entries[key] = old
                     self._used += old.nbytes
+                    self._bump_model_bytes(key, old.nbytes)
                 return False
             pins = (old.pins if old is not None else 0) + (1 if pin else 0)
             self._entries[key] = _Entry(value, nbytes, pins=pins,
                                         restream_bytes=restream)
             self._used += nbytes
+            self._bump_model_bytes(key, nbytes)
             self.stats.inserted_bytes += nbytes
             ms.inserted_bytes += nbytes
             if old is not None:                     # ledger: old bytes leave
@@ -242,6 +254,7 @@ class WeightCache:
             if e is None:
                 return False
             self._used -= e.nbytes
+            self._bump_model_bytes(key, -e.nbytes)
             self.stats.removals += 1
             self.stats.removed_bytes += e.nbytes
             ms = self._mstats(key)
@@ -286,9 +299,11 @@ class WeightCache:
             return self._model_stats.setdefault(model, CacheStats())
 
     def model_bytes(self, model: str) -> int:
+        """Resident bytes of one model's entries — O(1), maintained
+        incrementally (the SLO scheduler calls this per queue at every
+        preemption checkpoint)."""
         with self._lock:
-            return sum(e.nbytes for k, e in self._entries.items()
-                       if self._model_of(k) == model)
+            return self._model_bytes.get(model, 0)
 
     def keys(self):
         with self._lock:

@@ -1,0 +1,171 @@
+"""Reusable SimClock scenario builders for the online/SLO serving tests.
+
+A scenario is (trace, clock behaviour, engine knobs) replayed through
+``ServingEngine.serve`` entirely on virtual time — no real sleeps, no
+wall-clock assertions, bit-for-bit reproducible schedules. Both
+``tests/test_online_serving.py`` and ``tests/test_slo_serving.py`` build
+on these helpers so every serving test speaks the same vocabulary:
+
+    run = Scenario(trace=..., scheduler="slo", slo=SLOConfig(...)).run(models)
+    assert run.batch_models() == ["a", "b", "a"]
+    assert_outputs_exact(run.responses, preload_refs(models, trace))
+
+``TINY_CFG`` is the 2-layer/64-dim GPT-Neo variant every serving test
+executes (small enough that a full scenario runs in well under a second
+of real time); ``EXEC`` is the canonical fixed virtual charge per batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import SimClock
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.stream import RequestStream
+from repro.serving.types import Response, SLOConfig
+
+TINY_CFG = replace(GPTNEO_S, num_layers=2, d_model=64, n_heads=2,
+                   n_kv_heads=2, d_ff=128, vocab=256, name="tiny")
+SEQ = 16
+CHUNK = 16 << 10
+EXEC = 0.05
+
+
+def tok(rng: np.random.Generator, seq: int = SEQ) -> np.ndarray:
+    return rng.integers(0, TINY_CFG.vocab, (1, seq), dtype=np.int32)
+
+
+def build_models(names=("a", "b", "c"), cfg=TINY_CFG,
+                 seq: int = SEQ) -> Dict[str, HostModel]:
+    return {n: HostModel.build(replace(cfg, name=n), seq=seq, seed=i)
+            for i, n in enumerate(names)}
+
+
+def combined_bytes(models: Dict[str, HostModel]) -> int:
+    return sum(sum(a.nbytes for a in m.host_weights.values())
+               for m in models.values())
+
+
+def make_engine(models: Dict[str, HostModel], *, budget_frac: float = 0.6,
+                **kw) -> ServingEngine:
+    kw.setdefault("budget_bytes", int(budget_frac * combined_bytes(models)))
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK, **kw)
+    for n, m in models.items():
+        eng.register(n, m)
+    return eng
+
+
+def preload_refs(models: Dict[str, HostModel],
+                 trace: List[Request]) -> Dict[tuple, np.ndarray]:
+    """Per-request solo preload references keyed (model, arrival_s) — the
+    ground truth every streamed/batched/preempted output must equal."""
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    return {(r.model, r.arrival_s):
+            np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace}
+
+
+def assert_outputs_exact(responses: List[Response],
+                         refs: Dict[tuple, np.ndarray]):
+    """Every SERVED response equals its preload reference bit-for-bit."""
+    for r in responses:
+        if r.status != "ok":
+            continue
+        assert np.array_equal(np.asarray(r.result),
+                              refs[(r.model, r.arrival_s)]), \
+            f"output diverged for {r.model}@{r.arrival_s}"
+
+
+@dataclass
+class ScenarioRun:
+    """One executed scenario: the engine (with its decision logs), the
+    virtual clock it ran on, and the responses — plus the common
+    reductions the schedule assertions are written in."""
+    engine: ServingEngine
+    clock: SimClock
+    responses: List[Response]
+
+    def served(self) -> List[Response]:
+        return [r for r in self.responses if r.status == "ok"]
+
+    def rejected(self) -> List[Response]:
+        return [r for r in self.responses if r.status == "rejected"]
+
+    def by_key(self) -> Dict[tuple, Response]:
+        return {(r.model, r.arrival_s): r for r in self.responses}
+
+    def by_model(self) -> Dict[str, List[Response]]:
+        out: Dict[str, List[Response]] = {}
+        for r in self.responses:
+            out.setdefault(r.model, []).append(r)
+        return out
+
+    def batch_models(self) -> List[str]:
+        """Executed-batch model order — the schedule, as a word."""
+        return [m for _, m, _ in self.engine.batch_log]
+
+    def miss_rate(self) -> float:
+        from repro.serving.types import deadline_miss_rate
+        return deadline_miss_rate(self.responses)
+
+    def rejection_rate(self) -> float:
+        from repro.serving.types import rejection_rate
+        return rejection_rate(self.responses)
+
+
+@dataclass
+class Scenario:
+    """A replayable serving scenario: a trace plus every knob ``serve``
+    takes, with the defaults the suite standardises on (fixed ``EXEC``
+    virtual charge, exact cost priors so SLO projections are
+    deterministic from the first batch)."""
+    trace: List[Request]
+    scheduler: str = "fifo"
+    exec_time: Union[None, float, Callable[[str], float]] = EXEC
+    budget_frac: float = 0.6
+    batcher: Optional[BatcherConfig] = None
+    slo: Optional[SLOConfig] = None
+    admission: Optional[bool] = None
+    preempt: Optional[bool] = None
+    priors: Optional[Dict[str, float]] = None
+    engine_kw: dict = field(default_factory=dict)
+
+    def priors_for(self, models) -> Dict[str, float]:
+        if self.priors is not None:
+            return dict(self.priors)
+        if callable(self.exec_time):
+            return {n: float(self.exec_time(n)) for n in models}
+        if self.exec_time is not None:
+            return {n: float(self.exec_time) for n in models}
+        return {}
+
+    def run(self, models: Dict[str, HostModel]) -> ScenarioRun:
+        eng = make_engine(models, budget_frac=self.budget_frac,
+                          **self.engine_kw)
+        clock = SimClock(exec_time=self.exec_time)
+        responses = eng.serve(
+            RequestStream.from_trace(list(self.trace)), clock=clock,
+            scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
+            admission=self.admission, preempt=self.preempt,
+            cost_model=BatchLatencyEstimator(priors=self.priors_for(models)))
+        assert clock.now() >= max((r.arrival_s for r in self.trace),
+                                  default=0.0)
+        return ScenarioRun(engine=eng, clock=clock, responses=responses)
+
+
+def overload_trace(models: Dict[str, HostModel], load_x: float,
+                   duration_s: float, *, seed: int = 13,
+                   seq: int = SEQ) -> List[Request]:
+    """Seeded Poisson trace offering ``load_x`` times the service rate
+    (1/EXEC batches per second at batch size 1), spread evenly across the
+    registered models — the overload workload of the ISSUE's acceptance
+    scenario and benchmarks/slo_overload.py."""
+    from repro.serving.stream import poisson_trace
+    per_model_rate = load_x / (EXEC * len(models))
+    return poisson_trace({n: per_model_rate for n in models}, duration_s,
+                         vocab=TINY_CFG.vocab, seq=seq, seed=seed)

@@ -1,47 +1,26 @@
 """Online serving loop scenarios — all driven by the injectable SimClock
-and replayable RequestStream traces: no real sleeps, no wall-clock
-assertions. Covers the ISSUE's deterministic scenarios (burst flips the
-prefetch target; empty-queue idle then arrival; interleave fairness under
-skewed rates), clock/stream primitives, and end-to-end de-batched output
-exactness."""
+and replayable RequestStream traces via the shared scenario builders in
+``serving_scenarios.py``: no real sleeps, no wall-clock assertions.
+Covers the deterministic scenarios (burst flips the prefetch target;
+empty-queue idle then arrival; interleave fairness under skewed rates),
+clock/stream primitives, prefetch-hint (``peek_upcoming``) semantics,
+and end-to-end de-batched output exactness."""
 from collections import deque
-from dataclasses import replace
 
 import numpy as np
 import pytest
 
-from repro.configs.gptneo import GPTNEO_S
-from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import MonotonicClock, SimClock
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request
 from repro.serving.stream import (RequestStream, bursty_trace, poisson_trace)
-
-CFG = replace(GPTNEO_S, num_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
-              d_ff=128, vocab=256, name="tiny")
-SEQ = 16
-CHUNK = 16 << 10
-EXEC = 0.05
-
-
-def _tok(rng, seq=SEQ):
-    return rng.integers(0, CFG.vocab, (1, seq), dtype=np.int32)
+from serving_scenarios import (EXEC, Scenario, assert_outputs_exact,
+                               build_models, make_engine, preload_refs, tok)
 
 
 @pytest.fixture(scope="module")
 def models():
-    return {n: HostModel.build(replace(CFG, name=n), seq=SEQ, seed=i)
-            for i, n in enumerate(("a", "b", "c"))}
-
-
-def _engine(models, **kw):
-    combined = sum(sum(a.nbytes for a in m.host_weights.values())
-                   for m in models.values())
-    kw.setdefault("budget_bytes", int(0.6 * combined))
-    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK, **kw)
-    for n, m in models.items():
-        eng.register(n, m)
-    return eng
+    return build_models(("a", "b", "c"))
 
 
 # ---------------------------------------------------------------------------
@@ -65,9 +44,24 @@ def test_sim_clock_is_deterministic():
     assert MonotonicClock().tick(0.5) == 0.5        # no-op passthrough
 
 
+def test_sim_clock_tick_frac_charges_partial_batches():
+    """Preemption charges a batch in segments: with fixed/per-model exec
+    times the fractions must sum to exactly one batch's charge."""
+    c = SimClock(exec_time=0.2)
+    c.tick(99.0, "m", frac=0.25)
+    c.tick(99.0, "m", frac=0.75)
+    assert c.now() == pytest.approx(0.2)
+    per_model = SimClock(exec_time=lambda m: 0.4)
+    per_model.tick(1.0, "m", frac=0.5)
+    assert per_model.now() == pytest.approx(0.2)
+    measured = SimClock()                 # real-dt mode: frac is ignored,
+    measured.tick(0.125, "m", frac=0.5)   # segments are already partial
+    assert measured.now() == pytest.approx(0.125)
+
+
 def test_request_stream_orders_polls_and_exhausts():
     rng = np.random.default_rng(0)
-    reqs = [Request("a", _tok(rng), arrival_s=t) for t in (0.3, 0.1, 0.2)]
+    reqs = [Request("a", tok(rng), arrival_s=t) for t in (0.3, 0.1, 0.2)]
     s = RequestStream.from_trace(reqs)
     assert s.next_arrival() == 0.1
     assert [r.arrival_s for r in s.peek_upcoming()] == [0.1, 0.2, 0.3]
@@ -78,9 +72,25 @@ def test_request_stream_orders_polls_and_exhausts():
     assert s.exhausted
     live = RequestStream()
     assert not live.closed and live.poll(10.0) == []
-    live.push(Request("a", _tok(rng), arrival_s=0.5))
+    live.push(Request("a", tok(rng), arrival_s=0.5))
     live.close()
     assert len(live.poll(1.0)) == 1 and live.exhausted
+
+
+def test_push_after_close_raises_and_double_close_is_noop():
+    """Regression: push on a closed stream used to raise a bare
+    AssertionError — gone under `python -O`, silently dropping the
+    request. It must be a real RuntimeError; close() stays idempotent."""
+    rng = np.random.default_rng(1)
+    s = RequestStream()
+    s.push(Request("a", tok(rng), arrival_s=0.0))
+    s.close()
+    s.close()                                       # double-close: no-op
+    assert s.closed
+    with pytest.raises(RuntimeError, match="closed"):
+        s.push(Request("a", tok(rng), arrival_s=0.1))
+    # the pre-close request is intact and drainable
+    assert len(s.poll(1.0)) == 1 and s.exhausted
 
 
 def test_trace_generators_are_seeded_and_sorted():
@@ -100,24 +110,24 @@ def test_trace_generators_are_seeded_and_sorted():
 # ---------------------------------------------------------------------------
 
 def test_burst_flips_prefetch_target_decision(models):
-    """The ISSUE scenario at decision level: while `a` runs, the target is
+    """The burst scenario at decision level: while `a` runs, the target is
     a speculative warm of the trace's next foreign arrival (c) — until a
     burst of b lands in the queue, which flips the target to b."""
-    eng = _engine(models)
+    eng = make_engine(models)
     rng = np.random.default_rng(0)
-    pending = {"a": deque([Request("a", _tok(rng), arrival_s=0.0)]),
+    pending = {"a": deque([Request("a", tok(rng), arrival_s=0.0)]),
                "b": deque(), "c": deque()}
     stream = RequestStream.from_trace(
-        [Request("c", _tok(rng), arrival_s=1.0)])
+        [Request("c", tok(rng), arrival_s=1.0)])
     assert eng._pick_prefetch_target(pending, stream, "a") == ("c", True)
     burst_t = 0.2
-    pending["b"].extend(Request("b", _tok(rng), arrival_s=burst_t + 0.01 * i)
+    pending["b"].extend(Request("b", tok(rng), arrival_s=burst_t + 0.01 * i)
                         for i in range(3))
     assert eng._pick_prefetch_target(pending, stream, "a") == ("b", False)
     # static scheduler ignores the burst: rotation after `a` picks b only
     # by registration order coincidence — give c a queued request and check
     # static still follows rotation while arrival follows the queue state
-    pending["c"].append(Request("c", _tok(rng), arrival_s=0.05))
+    pending["c"].append(Request("c", tok(rng), arrival_s=0.05))
     assert eng._pick_prefetch_target(
         pending, stream, "a", scheduler="static")[0] == "b"
     # arrival-aware: c's head has waited since 0.05 < burst_t -> c wins now
@@ -125,19 +135,21 @@ def test_burst_flips_prefetch_target_decision(models):
 
 
 def test_pick_next_model_earliest_head_with_rr_tiebreak(models):
-    eng = _engine(models)
+    eng = make_engine(models)
     rng = np.random.default_rng(0)
-    pending = {"a": deque([Request("a", _tok(rng), arrival_s=0.2)]),
-               "b": deque([Request("b", _tok(rng), arrival_s=0.1)]),
+    pending = {"a": deque([Request("a", tok(rng), arrival_s=0.2)]),
+               "b": deque([Request("b", tok(rng), arrival_s=0.1)]),
                "c": deque()}
     assert eng._pick_next_model(pending, None) == "b"
     # equal arrivals rotate after `last`
-    pending["c"].append(Request("c", _tok(rng), arrival_s=0.1))
+    pending["c"].append(Request("c", tok(rng), arrival_s=0.1))
     assert eng._pick_next_model(pending, "b") == "c"
     assert eng._pick_next_model(pending, "c") == "b"
     # static ignores arrivals entirely: registration rotation after last
     assert eng._pick_next_model(pending, "a", "static") == "b"
     assert eng._pick_next_model(pending, "b", "static") == "c"
+    # "fifo" is the same policy as the default arrival-order picking
+    assert eng._pick_next_model(pending, None, "fifo") == "b"
 
 
 # ---------------------------------------------------------------------------
@@ -151,22 +163,20 @@ def test_burst_redirects_prefetch_in_serve_loop(models):
     rng = np.random.default_rng(1)
     # arrivals slightly faster than the EXEC service rate: a backlog builds,
     # so prefetch decisions are made against real queue state
-    trace = [Request("a", _tok(rng), arrival_s=0.045 * i) for i in range(8)]
-    trace += [Request("c", _tok(rng), arrival_s=t) for t in (0.02, 0.33)]
+    trace = [Request("a", tok(rng), arrival_s=0.045 * i) for i in range(8)]
+    trace += [Request("c", tok(rng), arrival_s=t) for t in (0.02, 0.33)]
     burst_t = 0.14
-    trace += [Request("b", _tok(rng), arrival_s=burst_t + 0.01 * i)
+    trace += [Request("b", tok(rng), arrival_s=burst_t + 0.01 * i)
               for i in range(3)]
     trace.sort(key=lambda r: r.arrival_s)
 
+    batcher = BatcherConfig(max_batch=4, max_wait_s=0.01)
     logs = {}
     for sched in ("arrival", "static"):
-        eng = _engine(models)
-        responses = eng.serve(RequestStream.from_trace(list(trace)),
-                              clock=SimClock(exec_time=EXEC), scheduler=sched,
-                              batcher=BatcherConfig(max_batch=4,
-                                                    max_wait_s=0.01))
-        assert len(responses) == len(trace)
-        logs[sched] = list(eng.prefetch_log)
+        run = Scenario(trace=list(trace), scheduler=sched,
+                       batcher=batcher).run(models)
+        assert len(run.responses) == len(trace)
+        logs[sched] = list(run.engine.prefetch_log)
     hits_b = [(t, cur, tgt, spec) for t, cur, tgt, spec in logs["arrival"]
               if tgt == "b" and not spec]
     assert hits_b, "burst never became a live (non-speculative) target"
@@ -179,20 +189,59 @@ def test_burst_redirects_prefetch_in_serve_loop(models):
 def test_empty_queue_idles_to_next_arrival_then_serves(models):
     rng = np.random.default_rng(2)
     gap_t = 5.0
-    trace = [Request("a", _tok(rng), arrival_s=0.0),
-             Request("b", _tok(rng), arrival_s=gap_t)]
-    eng = _engine(models)
-    clock = SimClock(exec_time=EXEC)
-    responses = eng.serve(RequestStream.from_trace(trace), clock=clock)
-    assert len(responses) == 2
+    trace = [Request("a", tok(rng), arrival_s=0.0),
+             Request("b", tok(rng), arrival_s=gap_t)]
+    run = Scenario(trace=trace).run(models)
+    assert len(run.responses) == 2
     # the loop slept the queue-empty gap away on the virtual clock
-    assert any(nxt == gap_t for _, nxt in eng.idle_log)
-    assert clock.slept_s == pytest.approx(gap_t - EXEC)
-    assert clock.now() == pytest.approx(gap_t + EXEC)
-    late = responses[-1]
+    assert any(nxt == gap_t for _, nxt in run.engine.idle_log)
+    assert run.clock.slept_s == pytest.approx(gap_t - EXEC)
+    assert run.clock.now() == pytest.approx(gap_t + EXEC)
+    late = run.responses[-1]
     assert late.model == "b"
     assert late.queue_s == 0.0                     # served on arrival
     assert late.latency_s == pytest.approx(EXEC)
+
+
+def test_peek_upcoming_only_warms_never_schedules(models):
+    """Prefetch-hint semantics: ``peek_upcoming`` exposes not-yet-arrived
+    trace requests, and the engine may only WARM the pool from them —
+    never execute a batch before its request's arrival time. While `a`
+    runs, the future `b` arrival is a speculative prefetch target; b's
+    batch still starts exactly at its arrival, not earlier."""
+    rng = np.random.default_rng(12)
+    b_t = 5.0
+    trace = [Request("a", tok(rng), arrival_s=0.0),
+             Request("b", tok(rng), arrival_s=b_t)]
+    run = Scenario(trace=trace).run(models)
+    # the speculative warm happened (b peeked from the trace while a ran)
+    spec = [(t, cur, tgt) for t, cur, tgt, s in run.engine.prefetch_log if s]
+    assert ("b" in [tgt for _, _, tgt in spec])
+    # ...but every executed batch starts at-or-after its head's arrival
+    for t_start, m, _ in run.engine.batch_log:
+        heads = [r.arrival_s for r in trace if r.model == m]
+        assert t_start >= min(heads) - 1e-9, (m, t_start)
+    b_starts = [t for t, m, _ in run.engine.batch_log if m == "b"]
+    assert b_starts == [pytest.approx(b_t)]
+    # models the trace never mentions are neither warmed nor scheduled
+    assert all(m != "c" for _, m, _ in run.engine.batch_log)
+    assert all(tgt != "c" for _, _, tgt in spec)
+
+
+def test_peek_upcoming_empty_queue_idle_does_not_schedule(models):
+    """The empty-queue idle case: nothing arrived yet, upcoming requests
+    known from the trace — the loop must IDLE to the first arrival (no
+    batch, no response before it), not act on the peeked future."""
+    rng = np.random.default_rng(13)
+    first_t = 2.0
+    trace = [Request("a", tok(rng), arrival_s=first_t),
+             Request("b", tok(rng), arrival_s=first_t + 0.5)]
+    run = Scenario(trace=trace).run(models)
+    # idled straight to the first arrival; nothing executed before it
+    assert run.engine.idle_log and run.engine.idle_log[0] == (0.0, first_t)
+    assert all(t >= first_t for t, _, _ in run.engine.batch_log)
+    assert min(r.finish_s for r in run.responses) >= first_t
+    assert len(run.responses) == 2
 
 
 def test_interleave_fairness_under_skewed_rates(models):
@@ -200,25 +249,22 @@ def test_interleave_fairness_under_skewed_rates(models):
     FIFO over queue heads, so the low-rate model's lone request is served
     before any batch whose head arrived later — no starvation."""
     rng = np.random.default_rng(3)
-    trace = [Request("a", _tok(rng), arrival_s=0.02 * i) for i in range(10)]
-    trace += [Request("b", _tok(rng), arrival_s=t) for t in (0.05, 0.15)]
+    trace = [Request("a", tok(rng), arrival_s=0.02 * i) for i in range(10)]
+    trace += [Request("b", tok(rng), arrival_s=t) for t in (0.05, 0.15)]
     c_t = 0.06
-    trace += [Request("c", _tok(rng), arrival_s=c_t)]
+    trace += [Request("c", tok(rng), arrival_s=c_t)]
     trace.sort(key=lambda r: r.arrival_s)
-    eng = _engine(models)
-    responses = eng.serve(RequestStream.from_trace(trace),
-                          clock=SimClock(exec_time=EXEC),
-                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.03))
-    by_model = {}
-    for r in responses:
-        by_model.setdefault(r.model, []).append(r)
+    run = Scenario(trace=trace,
+                   batcher=BatcherConfig(max_batch=4,
+                                         max_wait_s=0.03)).run(models)
+    by_model = run.by_model()
     assert len(by_model["a"]) == 10
     assert len(by_model["b"]) == 2
     assert len(by_model["c"]) == 1
     # once c is queued, only heads that arrived before it can run first —
     # c never starves: it waits at most the in-flight batch + the (few)
     # earlier-arrived heads
-    c_start = next(t for t, m, _ in eng.batch_log if m == "c")
+    c_start = next(t for t, m, _ in run.engine.batch_log if m == "c")
     assert c_start <= c_t + 3 * EXEC
     # per-model FIFO: each model's responses complete in arrival order
     for m, rs in by_model.items():
@@ -232,35 +278,28 @@ def test_serve_outputs_debatch_bit_for_bit(models):
     rng = np.random.default_rng(4)
     trace = []
     for i in range(4):
-        trace.append(Request("a", _tok(rng, seq=12 + 2 * i),
+        trace.append(Request("a", tok(rng, seq=12 + 2 * i),
                              arrival_s=0.01 * i))
-    trace.append(Request("b", _tok(rng), arrival_s=0.02))
-    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
-    refs = [np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace]
-    eng = _engine(models)
-    responses = eng.serve(RequestStream.from_trace(list(trace)),
-                          clock=SimClock(exec_time=EXEC),
-                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.05))
-    assert len(responses) == len(trace)
-    assert max(r.batch_size for r in responses) > 1    # coalescing happened
-    by_key = {(r.model, r.arrival_s): r for r in responses}
-    for req, ref in zip(trace, refs):
-        got = by_key[(req.model, req.arrival_s)]
-        assert np.array_equal(np.asarray(got.result), ref), req.model
+    trace.append(Request("b", tok(rng), arrival_s=0.02))
+    refs = preload_refs(models, trace)
+    run = Scenario(trace=list(trace),
+                   batcher=BatcherConfig(max_batch=4,
+                                         max_wait_s=0.05)).run(models)
+    assert len(run.responses) == len(trace)
+    assert max(r.batch_size for r in run.responses) > 1    # coalescing
+    assert_outputs_exact(run.responses, refs)
 
 
 def test_unregistered_model_request_is_rejected_not_fatal(models):
     """A request for an unknown model must not crash the loop or strand
     the valid requests queued behind it."""
     rng = np.random.default_rng(6)
-    trace = [Request("a", _tok(rng), arrival_s=0.0),
-             Request("ghost", _tok(rng), arrival_s=0.01),
-             Request("b", _tok(rng), arrival_s=0.02)]
-    eng = _engine(models)
-    responses = eng.serve(RequestStream.from_trace(trace),
-                          clock=SimClock(exec_time=EXEC))
-    assert sorted(r.model for r in responses) == ["a", "b"]
-    assert [r.model for r in eng.rejected] == ["ghost"]
+    trace = [Request("a", tok(rng), arrival_s=0.0),
+             Request("ghost", tok(rng), arrival_s=0.01),
+             Request("b", tok(rng), arrival_s=0.02)]
+    run = Scenario(trace=trace).run(models)
+    assert sorted(r.model for r in run.responses) == ["a", "b"]
+    assert [r.model for r in run.engine.rejected] == ["ghost"]
 
 
 def test_live_stream_idle_sleep_capped_at_poll_interval(models):
@@ -269,7 +308,7 @@ def test_live_stream_idle_sleep_capped_at_poll_interval(models):
     keep the single full-gap sleep."""
     rng = np.random.default_rng(7)
     stream = RequestStream()                        # live: NOT closed
-    stream.push(Request("a", _tok(rng), arrival_s=1.0))
+    stream.push(Request("a", tok(rng), arrival_s=1.0))
     poll_s = 0.001
 
     class ClosingClock(SimClock):
@@ -284,8 +323,8 @@ def test_live_stream_idle_sleep_capped_at_poll_interval(models):
                 stream.close()
 
     clock = ClosingClock(exec_time=EXEC)
-    responses = _engine(models).serve(stream, clock=clock,
-                                      poll_interval_s=poll_s)
+    responses = make_engine(models).serve(stream, clock=clock,
+                                          poll_interval_s=poll_s)
     assert len(responses) == 1
     assert all(dt == poll_s for dt in clock.sleeps[:3])   # capped while live
     assert max(clock.sleeps) > poll_s               # full-gap once closed
@@ -293,34 +332,28 @@ def test_live_stream_idle_sleep_capped_at_poll_interval(models):
 
 def test_model_report_counts_requests_not_batches(models):
     rng = np.random.default_rng(8)
-    trace = [Request("a", _tok(rng), arrival_s=0.01 * i) for i in range(4)]
-    eng = _engine(models)
-    responses = eng.serve(RequestStream.from_trace(trace),
-                          clock=SimClock(exec_time=EXEC),
-                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.1))
-    assert len(eng.batch_log) < len(trace)          # coalescing happened
-    rep = eng.model_report()
+    trace = [Request("a", tok(rng), arrival_s=0.01 * i) for i in range(4)]
+    run = Scenario(trace=trace,
+                   batcher=BatcherConfig(max_batch=4,
+                                         max_wait_s=0.1)).run(models)
+    assert len(run.engine.batch_log) < len(trace)   # coalescing happened
+    rep = run.engine.model_report()
     assert rep["a"].requests == len(trace)
 
 
 def test_serve_with_cost_eviction_stays_exact_and_balanced(models):
+    from serving_scenarios import SEQ, TINY_CFG, combined_bytes
     rng = np.random.default_rng(5)
     trace = poisson_trace({"a": 8.0, "b": 6.0, "c": 4.0}, 0.8,
-                          vocab=CFG.vocab, seq=SEQ, seed=11)
-    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
-    refs = [np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace]
-    eng = _engine(models, eviction="cost",
-                  budget_bytes=int(0.4 * sum(
-                      sum(a.nbytes for a in m.host_weights.values())
-                      for m in models.values())))
-    responses = eng.serve(RequestStream.from_trace(list(trace)),
-                          clock=SimClock(exec_time=EXEC),
-                          batcher=BatcherConfig(max_batch=4, max_wait_s=0.04))
-    assert len(responses) == len(trace)
-    by_key = {(r.model, r.arrival_s): r for r in responses}
-    for req, ref in zip(trace, refs):
-        assert np.array_equal(np.asarray(by_key[(req.model,
-                                                 req.arrival_s)].result), ref)
+                          vocab=TINY_CFG.vocab, seq=SEQ, seed=11)
+    refs = preload_refs(models, trace)
+    run = Scenario(trace=list(trace),
+                   batcher=BatcherConfig(max_batch=4, max_wait_s=0.04),
+                   budget_frac=0.4,
+                   engine_kw=dict(eviction="cost")).run(models)
+    assert len(run.responses) == len(trace)
+    assert_outputs_exact(run.responses, refs)
+    eng = run.engine
     assert eng.cache.policy == "cost"
     assert eng.cache.used_bytes() <= eng.cache.budget_bytes
     assert eng.cache.ledger_balanced()

@@ -1,0 +1,378 @@
+"""SLO-aware serving scenarios — deadline scheduling, preemption, and
+admission control, all driven by the reusable SimClock scenario builders
+in ``serving_scenarios.py`` (trace in, schedule assertions out; no real
+sleeps, bit-for-bit reproducible).
+
+Headline scenarios (the ISSUE's acceptance criteria):
+  * seeded 2x-overload trace: ``scheduler="slo"`` strictly reduces
+    deadline-miss-rate vs ``scheduler="fifo"`` with bit-for-bit identical
+    outputs for every admitted request;
+  * preemption at op boundaries serves an urgent deadline mid-batch, and
+    resume never re-streams an already-resident chunk (cache byte ledger);
+  * admission control rejects infeasible work explicitly instead of
+    inflating tail latency, and sheds queued heads that became hopeless.
+"""
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.core.streaming import HostModel
+from repro.serving.batcher import BatcherConfig
+from repro.serving.engine import Request
+from repro.serving.types import (SLOConfig, deadline_miss_rate,
+                                 rejection_rate)
+from serving_scenarios import (EXEC, SEQ, TINY_CFG, Scenario, assert_outputs_exact,
+                               build_models, make_engine, overload_trace,
+                               preload_refs, tok)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(("a", "b", "c"))
+
+
+# ---------------------------------------------------------------------------
+# unit level: estimator, SLO config, response metrics
+# ---------------------------------------------------------------------------
+
+def test_batch_latency_estimator_priors_then_ewma():
+    est = BatchLatencyEstimator(prior_s=0.1, alpha=0.5,
+                                priors={"a": 0.4})
+    assert est.estimate("a") == 0.4          # explicit prior
+    assert est.estimate("zzz") == 0.1        # default prior
+    est.observe("a", 0.2)
+    assert est.estimate("a") == 0.2          # first sample replaces prior
+    est.observe("a", 0.4)
+    assert est.estimate("a") == pytest.approx(0.3)   # EWMA afterwards
+    est.observe("b", 0.05)
+    assert est.estimate("b") == 0.05
+
+
+def test_slo_config_and_deadline_metrics():
+    slo = SLOConfig(default_slo_s=0.2, per_model={"asr": 0.05})
+    rng = np.random.default_rng(0)
+    r = Request("asr", tok(rng), arrival_s=1.0)
+    assert slo.slo_for("asr") == 0.05
+    assert slo.slo_for("lm") == 0.2
+    assert slo.deadline_for(r) == pytest.approx(1.05)
+    from repro.serving.types import Response
+    ok = Response("m", 0.1, 0, 0, 0, arrival_s=1.0, deadline_s=1.15)
+    late = Response("m", 0.3, 0, 0, 0, arrival_s=1.0, deadline_s=1.15)
+    nod = Response("m", 0.3, 0, 0, 0, arrival_s=1.0)
+    rej = Response("m", 0.0, 0, 0, 0, arrival_s=1.0, deadline_s=1.15,
+                   status="rejected")
+    assert ok.deadline_met is True and late.deadline_met is False
+    assert nod.deadline_met is None and rej.deadline_met is None
+    rs = [ok, late, nod, rej]
+    assert deadline_miss_rate(rs) == pytest.approx(0.5)   # of the 2 judged
+    assert rejection_rate(rs) == pytest.approx(0.25)
+
+
+def test_slo_without_deadlines_degenerates_to_fifo(models):
+    """scheduler="slo" with no SLO config and no request deadlines must
+    schedule exactly like fifo (urgency is uniformly infinite → arrival
+    tie-break) and admit everything."""
+    rng = np.random.default_rng(1)
+    trace = [Request("a", tok(rng), arrival_s=0.02 * i) for i in range(5)]
+    trace += [Request("b", tok(rng), arrival_s=0.03),
+              Request("c", tok(rng), arrival_s=0.07)]
+    trace.sort(key=lambda r: r.arrival_s)
+    fifo = Scenario(trace=trace, scheduler="fifo").run(models)
+    slo = Scenario(trace=trace, scheduler="slo").run(models)
+    assert slo.batch_models() == fifo.batch_models()
+    assert not slo.rejected() and not slo.engine.preempt_log
+    refs = preload_refs(models, trace)
+    assert_outputs_exact(fifo.responses, refs)
+    assert_outputs_exact(slo.responses, refs)
+
+
+# ---------------------------------------------------------------------------
+# headline: seeded 2x overload — slo strictly beats fifo on miss rate,
+# outputs bit-for-bit identical for all admitted requests  (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_slo_strictly_reduces_miss_rate_at_2x_overload(models):
+    trace = overload_trace(models, 2.0, 0.8, seed=13)
+    slo_cfg = SLOConfig(default_slo_s=4 * EXEC)
+    batcher = BatcherConfig(max_batch=2, max_wait_s=0.02)
+    runs = {}
+    for sched in ("fifo", "slo"):
+        runs[sched] = Scenario(trace=trace, scheduler=sched, slo=slo_cfg,
+                               batcher=batcher).run(models)
+        assert len(runs[sched].responses) == len(trace)
+    miss_fifo = runs["fifo"].miss_rate()
+    miss_slo = runs["slo"].miss_rate()
+    assert miss_fifo > 0, "trace not actually overloaded"
+    assert miss_slo < miss_fifo, (miss_slo, miss_fifo)
+    # overload was shed explicitly, not silently queued
+    assert runs["slo"].rejection_rate() > 0
+    assert not runs["fifo"].rejected()
+    # bit-for-bit: every request ADMITTED under slo produced exactly the
+    # output the fifo run (and the solo preload reference) produced
+    refs = preload_refs(models, trace)
+    assert_outputs_exact(runs["fifo"].responses, refs)
+    assert_outputs_exact(runs["slo"].responses, refs)
+    fifo_by_key = runs["fifo"].by_key()
+    for r in runs["slo"].served():
+        assert np.array_equal(np.asarray(r.result),
+                              np.asarray(fifo_by_key[(r.model,
+                                                      r.arrival_s)].result))
+    # every served slo request met its deadline budget far better than fifo
+    assert max(r.latency_s for r in runs["slo"].served()) \
+        <= max(r.latency_s for r in runs["fifo"].served())
+
+
+# ---------------------------------------------------------------------------
+# headline: preemption at op boundaries + no re-streaming on resume
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def preempt_models():
+    """`a` is a deeper model (a long batch with many op boundaries), `b`
+    a tiny urgent one. Registration order (a, b)."""
+    return {
+        "a": HostModel.build(replace(TINY_CFG, name="a", num_layers=4),
+                             seq=SEQ, seed=7),
+        "b": HostModel.build(replace(TINY_CFG, name="b"), seq=SEQ, seed=8),
+    }
+
+
+EXEC_AB = {"a": 0.2, "b": 0.03}
+
+
+def _preempt_trace(rng):
+    # long-deadline a starts at t=0; urgent b lands mid-flight at t=0.02
+    # with a deadline only preemption can make (waiting 0.2s misses it)
+    trace = [Request("a", tok(rng), arrival_s=0.0, deadline_s=1.0)]
+    trace += [Request("b", tok(rng), arrival_s=0.02, deadline_s=0.02 + 0.06)]
+    return trace
+
+
+def test_preemption_serves_urgent_deadline_mid_batch(preempt_models):
+    rng = np.random.default_rng(2)
+    trace = _preempt_trace(rng)
+    sc = Scenario(trace=trace, scheduler="slo",
+                  exec_time=lambda m: EXEC_AB[m], budget_frac=1.5)
+    run = sc.run(preempt_models)
+    assert len(run.engine.preempt_log) == 1
+    t_preempt, name, op_idx = run.engine.preempt_log[0]
+    assert name == "a" and op_idx > 0
+    assert t_preempt == pytest.approx(0.02, abs=1e-6)   # b's arrival time
+    by = run.by_key()
+    b = by[("b", 0.02)]
+    assert b.status == "ok" and b.deadline_met is True
+    assert b.latency_s == pytest.approx(EXEC_AB["b"])   # served on arrival
+    a = by[("a", 0.0)]
+    assert a.status == "ok" and a.deadline_met is True
+    # a was charged exactly one full execution + the preemption pause
+    assert a.latency_s == pytest.approx(EXEC_AB["a"] + EXEC_AB["b"])
+    # without preemption b is hopeless: fifo serves it late
+    fifo = Scenario(trace=_preempt_trace(np.random.default_rng(2)),
+                    scheduler="fifo", exec_time=lambda m: EXEC_AB[m],
+                    budget_frac=1.5).run(preempt_models)
+    assert fifo.by_key()[("b", 0.02)].deadline_met is False
+    assert not fifo.engine.preempt_log
+
+
+def test_preempt_resume_never_restreams_resident_chunks(preempt_models):
+    """Acceptance: the suspended run keeps its loader, arrived chunks, and
+    cache pins across the preemption, so resuming streams ZERO extra
+    bytes. Proven via the cache byte ledger: with no eviction pressure
+    (generous budget — verified), every one of the preempted model's pool
+    keys is inserted exactly once across preempt + resume; a re-stream of
+    a resident chunk would show up as a second insert of its key."""
+    rng = np.random.default_rng(3)
+    trace = _preempt_trace(rng)
+    eng = make_engine(preempt_models, budget_frac=1.5)
+    inserts = {}
+    orig_put = eng.cache.put
+
+    def counting_put(key, value, nbytes, pin=False, restream_bytes=None):
+        inserted = orig_put(key, value, nbytes, pin=pin,
+                            restream_bytes=restream_bytes)
+        if inserted and key[0] == "a":
+            inserts[key] = inserts.get(key, 0) + 1
+        return inserted
+
+    eng.cache.put = counting_put
+    from repro.serving.clock import SimClock
+    from repro.serving.stream import RequestStream
+    responses = eng.serve(
+        RequestStream.from_trace(list(trace)),
+        clock=SimClock(exec_time=lambda m: EXEC_AB[m]), scheduler="slo",
+        cost_model=BatchLatencyEstimator(priors=dict(EXEC_AB)))
+    assert eng.preempt_log, "scenario never preempted"
+    assert eng.cache.stats.evictions == 0      # no pressure: re-insert = bug
+    assert eng.cache.ledger_balanced()
+    dup = {k: c for k, c in inserts.items() if c > 1}
+    assert not dup, f"resume re-streamed resident keys: {dup}"
+    # the preempted batch's output still equals the solo preload reference
+    refs = preload_refs(preempt_models, trace)
+    assert_outputs_exact(responses, refs)
+    by = {(r.model, r.arrival_s): r for r in responses}
+    assert by[("a", 0.0)].status == "ok"
+    assert by[("b", 0.02)].status == "ok"
+    # control: without preemption the admission controller must refuse b's
+    # infeasible deadline rather than serve it late
+    straight = Scenario(trace=_preempt_trace(np.random.default_rng(3)),
+                        scheduler="slo", exec_time=lambda m: EXEC_AB[m],
+                        budget_frac=1.5, preempt=False).run(preempt_models)
+    assert not straight.engine.preempt_log
+    assert straight.by_key()[("b", 0.02)].status == "rejected"
+
+
+def test_no_preemption_for_equal_or_later_deadlines(preempt_models):
+    """A deadline that the arrival can still make by waiting — or one no
+    earlier than the running batch's — must NOT preempt (no ping-pong)."""
+    rng = np.random.default_rng(4)
+    trace = [Request("a", tok(rng), arrival_s=0.0, deadline_s=0.5),
+             # deadline met even after a finishes at 0.2: no preemption
+             Request("b", tok(rng), arrival_s=0.02, deadline_s=0.40)]
+    run = Scenario(trace=trace, scheduler="slo",
+                   exec_time=lambda m: EXEC_AB[m],
+                   budget_frac=1.5).run(preempt_models)
+    assert not run.engine.preempt_log
+    assert all(r.deadline_met for r in run.served())
+
+
+# ---------------------------------------------------------------------------
+# admission control: explicit rejection + shedding
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_infeasible_requests_explicitly(models):
+    """A burst far beyond capacity: the controller answers the excess with
+    Response(status="rejected") at arrival; every request it does admit
+    finishes within its deadline instead of queueing into a miss."""
+    rng = np.random.default_rng(5)
+    trace = [Request("a", tok(rng), arrival_s=0.001 * i) for i in range(10)]
+    slo_cfg = SLOConfig(default_slo_s=0.12)
+    run = Scenario(trace=trace, scheduler="slo", slo=slo_cfg).run(models)
+    assert len(run.responses) == len(trace)
+    assert run.rejected(), "overload was not shed"
+    assert all(r.deadline_met for r in run.served())
+    assert all(r.result is None and r.deadline_s is not None
+               for r in run.rejected())
+    kinds = [k for *_x, k in run.engine.admission_log]
+    assert "infeasible" in kinds
+    # fifo on the same trace: everything served, tail blown through the SLO
+    fifo = Scenario(trace=list(trace), scheduler="fifo",
+                    slo=slo_cfg, admission=False).run(models)
+    assert not fifo.rejected()
+    assert deadline_miss_rate(fifo.responses) > 0
+
+
+def test_queued_heads_shed_when_estimates_catch_up(models):
+    """Admission with an optimistic prior lets a backlog in; once the
+    first real execution corrects the estimate, heads whose deadlines
+    became hopeless are shed at dequeue time (kind="shed") rather than
+    executed into guaranteed misses."""
+    rng = np.random.default_rng(6)
+    trace = [Request("a", tok(rng), arrival_s=0.001 * i) for i in range(5)]
+    run = Scenario(trace=trace, scheduler="slo",
+                   slo=SLOConfig(default_slo_s=0.12),
+                   priors={n: 0.01 for n in models}).run(models)
+    kinds = [k for *_x, k in run.engine.admission_log]
+    assert "shed" in kinds
+    assert run.rejected()
+    assert all(r.deadline_met for r in run.served())
+
+
+def test_admission_off_serves_everything(models):
+    rng = np.random.default_rng(7)
+    trace = [Request("a", tok(rng), arrival_s=0.001 * i) for i in range(8)]
+    run = Scenario(trace=trace, scheduler="slo",
+                   slo=SLOConfig(default_slo_s=0.12),
+                   admission=False).run(models)
+    assert not run.rejected()
+    assert len(run.served()) == len(trace)
+    assert deadline_miss_rate(run.responses) > 0   # misses now show up
+
+
+# ---------------------------------------------------------------------------
+# cost-aware EDF: restream cost moves a cold model ahead of a warm one
+# ---------------------------------------------------------------------------
+
+def test_edf_accounts_for_cold_chunk_restream_cost():
+    """Two equal deadlines queue up while a long batch runs — one model
+    warm in the pool, one cold. The slo pick orders the COLD model first
+    (its feasible start is earlier once weight-loading time is charged);
+    fifo just follows arrival order."""
+    models = build_models(("a", "b", "c"))
+    EX = {"a": 0.05, "b": 0.05, "c": 0.3}
+    rng = np.random.default_rng(8)
+    trace = [
+        Request("b", tok(rng), arrival_s=0.0, deadline_s=3.0),   # warms b
+        Request("c", tok(rng), arrival_s=0.9, deadline_s=3.0),   # long batch
+        # both queue during c; equal deadlines, b warm, a cold; b arrived
+        # first so fifo serves b first — slo starts cold a earlier because
+        # its restream cost eats into the shared deadline
+        Request("b", tok(rng), arrival_s=1.0, deadline_s=2.0),
+        Request("a", tok(rng), arrival_s=1.01, deadline_s=2.0),
+    ]
+    kw = dict(exec_time=lambda m: EX[m], budget_frac=1.5,
+              engine_kw=dict(disk_bw=2e8))
+    fifo = Scenario(trace=list(trace), scheduler="fifo", **kw).run(models)
+    slo = Scenario(trace=list(trace), scheduler="slo", **kw).run(models)
+    assert fifo.batch_models() == ["b", "c", "b", "a"]   # arrival order
+    assert slo.batch_models() == ["b", "c", "a", "b"]    # cold a first
+    assert not slo.engine.preempt_log    # deadlines were waitable: no yield
+    assert all(r.deadline_met for r in slo.served())
+    assert_outputs_exact(slo.responses, preload_refs(models, trace))
+
+
+# ---------------------------------------------------------------------------
+# serve() argument validation / compatibility
+# ---------------------------------------------------------------------------
+
+def test_fifo_is_an_alias_for_arrival(models):
+    rng = np.random.default_rng(9)
+    trace = [Request("a", tok(rng), arrival_s=0.01 * i) for i in range(3)]
+    trace += [Request("b", tok(rng), arrival_s=0.015)]
+    a = Scenario(trace=trace, scheduler="arrival").run(models)
+    f = Scenario(trace=trace, scheduler="fifo").run(models)
+    assert a.batch_models() == f.batch_models()
+    assert [r.latency_s for r in a.responses] == \
+           [r.latency_s for r in f.responses]
+
+
+def test_unknown_scheduler_rejected(models):
+    rng = np.random.default_rng(10)
+    eng = make_engine(models)
+    from repro.serving.stream import RequestStream
+    # a real ValueError (not an assert: those vanish under `python -O`
+    # and would silently downgrade a typo to fifo scheduling)
+    with pytest.raises(ValueError, match="scheduler"):
+        eng.serve(RequestStream.from_trace(
+            [Request("a", tok(rng), arrival_s=0.0)]), scheduler="edf2")
+
+
+def test_serve_never_mutates_caller_requests(models):
+    """Regression: derived deadlines used to be stamped onto the caller's
+    Request objects, so replaying one trace first without an SLO config
+    froze deadline_s at +inf and silently disabled admission control on
+    every later SLO run of the same objects."""
+    rng = np.random.default_rng(14)
+    trace = [Request("a", tok(rng), arrival_s=0.001 * i) for i in range(6)]
+    Scenario(trace=trace, scheduler="fifo").run(models)
+    assert all(r.deadline_s is None for r in trace)
+    run = Scenario(trace=trace, scheduler="slo",
+                   slo=SLOConfig(default_slo_s=0.12)).run(models)
+    assert all(r.deadline_s is None for r in trace)   # still untouched
+    assert run.rejected(), \
+        "admission was silently disabled by stale deadlines"
+    assert all(r.deadline_s is not None for r in run.responses)
+
+
+def test_explicit_request_deadline_overrides_slo_config(models):
+    rng = np.random.default_rng(11)
+    trace = [Request("a", tok(rng), arrival_s=0.0, deadline_s=math.inf),
+             Request("b", tok(rng), arrival_s=0.0, deadline_s=0.06)]
+    run = Scenario(trace=trace, scheduler="slo",
+                   slo=SLOConfig(default_slo_s=10.0)).run(models)
+    by = run.by_key()
+    assert by[("b", 0.0)].deadline_s == 0.06    # kept, not overwritten
+    assert run.batch_models()[0] == "b"         # tighter deadline first

@@ -1,5 +1,7 @@
 """WeightCache invariants: LRU order, pinned protection, budget ceiling,
-hit-rate accounting (serving/weight_cache.py)."""
+hit-rate accounting (serving/weight_cache.py) — plus property-style
+seeded random op sequences asserting the global invariants hold after
+EVERY operation, under both eviction policies."""
 import numpy as np
 import pytest
 
@@ -225,6 +227,105 @@ def test_cost_policy_never_evicts_pinned():
     assert c.put(("m", "x", "w"), _arr(2), 2 * KB)   # must evict mid, not cheap
     assert c.contains(("m", "cheap", "w"))
     assert not c.contains(("m", "mid", "w"))
+
+
+# ---------------------------------------------------------------------------
+# property-style invariants: seeded random op sequences, both policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["lru", "cost"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_op_sequence_preserves_invariants(policy, seed):
+    """Whatever seeded sequence of put / acquire / release / remove /
+    touch / evict_model runs against the pool, after EVERY single op:
+      * used_bytes() <= budget_bytes (the pool never over-commits);
+      * the byte ledger balances (inserted == resident+evicted+removed);
+      * every pin WE hold still protects a resident entry with exactly
+        our pin count (policy eviction never drops a pinned chunk)."""
+    rng = np.random.default_rng(seed)
+    budget = 24 * KB
+    c = WeightCache(budget_bytes=budget, policy=policy)
+    pins = {}                             # key -> pin count this test holds
+
+    def check():
+        assert c.used_bytes() <= budget
+        assert c.ledger_balanced()
+        for k, cnt in pins.items():
+            if cnt > 0:
+                assert c.contains(k), (k, "pinned entry vanished")
+                assert c.pins(k) == cnt, (k, c.pins(k), cnt)
+        # the O(1) incremental per-model byte counters match a full scan
+        with c._lock:
+            scan = {}
+            for k, e in c._entries.items():
+                scan[k[0]] = scan.get(k[0], 0) + e.nbytes
+        for m in ("m0", "m1", "m2"):
+            assert c.model_bytes(m) == scan.get(m, 0), m
+
+    for step in range(400):
+        op = int(rng.integers(0, 100))
+        key = (f"m{int(rng.integers(0, 3))}",
+               f"w{int(rng.integers(0, 10))}", "w")
+        if op < 35:                                    # put (maybe pinned)
+            n_kb = int(rng.integers(1, 6))
+            pin = bool(rng.integers(0, 10) < 3)
+            restream = int(n_kb * KB // int(rng.integers(1, 4)))
+            ok = c.put(key, _arr(n_kb), n_kb * KB, pin=pin,
+                       restream_bytes=restream)
+            if ok and pin:
+                pins[key] = pins.get(key, 0) + 1
+        elif op < 55:                                  # acquire pins on hit
+            if c.acquire(key) is not None:
+                pins[key] = pins.get(key, 0) + 1
+        elif op < 75:                                  # release one held pin
+            held = [k for k, cnt in pins.items() if cnt > 0]
+            if held:
+                k = held[int(rng.integers(0, len(held)))]
+                c.release(k)
+                pins[k] -= 1
+        elif op < 85:                                  # explicit removal
+            c.remove(key)                              # (ignores pins)
+            pins.pop(key, None)
+        elif op < 95:                                  # read-only probes
+            c.touch(key)
+            c.contains(key)
+            c.free_bytes()
+        else:                                          # model-level drop
+            model = f"m{int(rng.integers(0, 3))}"
+            c.evict_model(model)                       # unpinned only:
+            check()                                    # held pins survive
+        check()
+
+    for k, cnt in pins.items():                        # wind down
+        for _ in range(cnt):
+            c.release(k)
+    c.clear()
+    assert c.used_bytes() == 0
+    assert c.ledger_balanced()
+    assert c.stats.inserted_bytes == (c.stats.evicted_bytes
+                                      + c.stats.removed_bytes)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["lru", "cost"])
+def test_random_ops_exercise_eviction_and_rejection(policy):
+    """The property sequences must actually stress the interesting paths
+    (a sequence that never evicts proves nothing)."""
+    rng = np.random.default_rng(99)
+    c = WeightCache(budget_bytes=8 * KB, policy=policy)
+    for _ in range(300):
+        n_kb = int(rng.integers(1, 5))
+        c.put((f"m{int(rng.integers(0, 2))}",
+               f"w{int(rng.integers(0, 12))}", "w"),
+              _arr(n_kb), n_kb * KB, pin=bool(rng.integers(0, 4) == 0))
+        if rng.integers(0, 5) == 0:
+            for k in c.keys()[:2]:
+                c.release(k)
+        assert c.used_bytes() <= c.budget_bytes
+        assert c.ledger_balanced()
+    assert c.stats.evictions > 0
+    assert c.stats.rejected_puts > 0
 
 
 def test_evict_model_drops_only_unpinned_entries_of_that_model():

@@ -23,6 +23,7 @@ def _val(n_kb):
     return np.zeros(n_kb * KB, np.uint8)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("policy", ["lru", "cost"])
 def test_concurrent_hammer_invariants(policy):
     budget = 64 * KB
