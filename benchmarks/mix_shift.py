@@ -1,0 +1,229 @@
+"""Mix-weighted joint budget allocation A/B: joint vs uniform split under
+a skewed and a drifting request mix.
+
+Two cells, both replayed on a ``SimClock`` virtual arrival timeline with
+MEASURED execution/streaming charges (``exec_time=None``) and a simulated
+storage stage (``disk_bw``), so latency reflects what the split actually
+controls — which bytes are pool-resident when a request lands:
+
+  * ``skewed``  — a static 8:1:1 mix. ``uniform`` plans every model
+    against the full budget (the pre-allocator iterative shrink);
+    ``joint`` partitions the budget by traffic share, so the hot model's
+    weights stay resident while cold models stream within small caps
+    (their low peaks also leave the engine more protect/prefetch headroom
+    for the hot model while they run). Expected: lower mean served
+    latency for ``joint`` at equal budget.
+  * ``drift``   — the mix flips from a-heavy to b-heavy mid-trace.
+    ``joint`` (planned for the initial mix, no re-planning) is compared
+    against ``joint+replan`` (``serve(replan=True)``: EWMA drift
+    detection, background re-plan, batch-boundary swap).
+
+Outputs are asserted bit-for-bit equal to per-request solo preload
+references in every cell — the split must never change what is computed.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only mix_shift``
+Standalone JSON (the CI perf-trajectory artifact):
+``PYTHONPATH=src python -m benchmarks.mix_shift --smoke --out
+BENCH_mix_shift.json``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.allocator import MixSpec
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.clock import SimClock
+from repro.serving.engine import ServingEngine
+from repro.serving.stream import RequestStream, poisson_trace
+
+SEQ = 32
+CHUNK = 32 << 10
+DISK_BW = 1e8                 # simulated storage stage (bytes/s)
+BUDGET_FRAC = 0.55            # of combined weights: real pool contention
+SKEW = {"hot": 8.0, "warm": 1.0, "cold": 1.0}
+
+
+def _models():
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    # the hot model is the big one — budget spent on it pays twice (its
+    # own latency AND most of the traffic)
+    return {
+        "hot": HostModel.build(replace(base, name="hot", num_layers=4),
+                               seq=SEQ, seed=0),
+        "warm": HostModel.build(replace(base, name="warm", num_layers=2),
+                                seq=SEQ, seed=1),
+        "cold": HostModel.build(replace(base, name="cold", num_layers=2),
+                                seq=SEQ, seed=2),
+    }
+
+
+def _budget(models) -> int:
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    return int(BUDGET_FRAC * combined)
+
+
+def _skewed_trace(models, duration_s: float, rate_x: float = 16.0):
+    vocab = min(m.cfg.vocab for m in models.values())
+    total = sum(SKEW.values())
+    rates = {n: rate_x * SKEW[n] / total for n in models}
+    return poisson_trace(rates, duration_s, vocab=vocab, seq=SEQ, seed=7)
+
+
+def _drift_trace(models, duration_s: float, rate_x: float = 16.0):
+    """a-heavy first half, b-heavy second half (hot <-> warm swap roles)."""
+    vocab = min(m.cfg.vocab for m in models.values())
+    half = duration_s / 2
+    first = poisson_trace({"hot": rate_x * 0.8, "warm": rate_x * 0.1,
+                           "cold": rate_x * 0.1}, half,
+                          vocab=vocab, seq=SEQ, seed=8)
+    second = poisson_trace({"hot": rate_x * 0.1, "warm": rate_x * 0.8,
+                            "cold": rate_x * 0.1}, half,
+                           vocab=vocab, seq=SEQ, seed=9)
+    for r in second:
+        r.arrival_s += half
+    trace = first + second
+    trace.sort(key=lambda r: r.arrival_s)
+    return trace
+
+
+def _serve(models, trace, budget, *, mix=None, replan=False):
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK,
+                        budget_bytes=budget, disk_bw=DISK_BW, mix=mix)
+    for n, m in models.items():
+        eng.register(n, m)
+    responses = eng.serve(
+        RequestStream.from_trace(list(trace)),
+        clock=SimClock(),            # measured charges on virtual arrivals
+        replan=replan, replan_drift=0.35,
+        # synchronous re-plan: the swap lands at a wall-clock-independent
+        # batch boundary, so the A/B artifact is schedule-deterministic
+        replan_background=False)
+    return eng, responses
+
+
+def _metrics(eng, responses):
+    served = [r for r in responses if r.status == "ok"]
+    # an empty cell must read as "no data" (NaN), never as 0.0s latency —
+    # a zero would win every A/B comparison it should be excluded from
+    lats = np.array([r.latency_s for r in served]) \
+        if served else np.array([float("nan")])
+    split = (eng.multi_plan.meta.get("split")
+             if eng.multi_plan is not None else None)
+    return {
+        "requests": len(responses),
+        "served": len(served),
+        "mean_s": float(np.mean(lats)),
+        "p95_s": float(np.percentile(lats, 95)),
+        "pool_hit_rate": eng.cache_hit_rate(),
+        "replans": sum(1 for e in eng.replan_log if e["event"] == "swap"),
+        "split_mb": {n: round(v / 2**20, 3) for n, v in split.items()}
+        if split else None,
+    }
+
+
+def _check_exact(models, trace, *runs):
+    """Every served response in every run equals its solo preload ref."""
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    refs = {(r.model, r.arrival_s):
+            np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace}
+    for responses in runs:
+        for r in responses:
+            if r.status != "ok":
+                continue
+            assert np.array_equal(np.asarray(r.result),
+                                  refs[(r.model, r.arrival_s)]), \
+                f"output diverged for {r.model}@{r.arrival_s}"
+
+
+def sweep(duration_s: float = 1.0, check_exact: bool = True) -> dict:
+    models = _models()
+    budget = _budget(models)
+    # warm the jitted kernels so measured charges reflect steady state
+    rng = np.random.default_rng(0)
+    for m in models.values():
+        PreloadExecutor(m).run(rng.integers(0, m.cfg.vocab, (1, SEQ),
+                                            dtype=np.int32))
+    result = {"bench": "mix_shift", "budget_bytes": budget,
+              "disk_bw": DISK_BW, "duration_s": duration_s,
+              "skew": dict(SKEW), "cells": {}}
+
+    trace = _skewed_trace(models, duration_s)
+    eng_u, res_u = _serve(models, trace, budget)
+    eng_j, res_j = _serve(models, trace, budget,
+                          mix=MixSpec.from_rates(SKEW))
+    if check_exact:
+        _check_exact(models, trace, res_u, res_j)
+    cell = {"uniform": _metrics(eng_u, res_u),
+            "joint": _metrics(eng_j, res_j)}
+    cell["joint_beats_uniform"] = bool(
+        cell["joint"]["served"] > 0 and cell["uniform"]["served"] > 0
+        and cell["joint"]["mean_s"] < cell["uniform"]["mean_s"])
+    result["cells"]["skewed"] = cell
+
+    dtrace = _drift_trace(models, duration_s)
+    init_mix = MixSpec.from_rates({"hot": 8.0, "warm": 1.0, "cold": 1.0})
+    eng_s, res_s = _serve(models, dtrace, budget, mix=init_mix)
+    eng_r, res_r = _serve(models, dtrace, budget, mix=init_mix, replan=True)
+    if check_exact:
+        _check_exact(models, dtrace, res_s, res_r)
+    dcell = {"joint_static": _metrics(eng_s, res_s),
+             "joint_replan": _metrics(eng_r, res_r)}
+    dcell["replans"] = dcell["joint_replan"]["replans"]
+    result["cells"]["drift"] = dcell
+    return result
+
+
+def run():
+    result = sweep()
+    rows = []
+    for cell_name, cell in result["cells"].items():
+        for variant, m in cell.items():
+            if not isinstance(m, dict):
+                continue
+            rows.append(Row(
+                f"mix_shift/{cell_name}/{variant}", m["mean_s"] * 1e6,
+                f"served={m['served']}/{m['requests']} "
+                f"mean={m['mean_s']:.4f}s p95={m['p95_s']:.4f}s "
+                f"hit_rate={m['pool_hit_rate']:.2f} "
+                f"replans={m['replans']}"))
+    sk = result["cells"]["skewed"]
+    rows.append(Row(
+        "mix_shift/skewed/delta", 0.0,
+        f"mean_uniform={sk['uniform']['mean_s']:.4f}s "
+        f"mean_joint={sk['joint']['mean_s']:.4f}s "
+        f"joint_beats_uniform={sk['joint_beats_uniform']}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tag the result as the CI smoke artifact (same "
+                    "workload — the 1.0s sweep is already the minimum "
+                    "that keeps the A/B stable)")
+    ap.add_argument("--out", default="",
+                    help="write the sweep dict as JSON (BENCH_*.json)")
+    args = ap.parse_args(argv)
+    # 1.0s keeps the cold-start/contention phase (where the split matters
+    # most) a large share of the trace; longer traces dilute the A/B into
+    # steady-state warm traffic where both variants converge
+    result = sweep(duration_s=1.0)
+    result["smoke"] = bool(args.smoke)
+    payload = json.dumps(result, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    print(payload)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,8 @@
 Pipeline:  graph -> capacities -> LC-OPG solve -> OverlapPlan ->
            {simulate | StreamingExecutor}.
 """
+from repro.core.allocator import (AllocationResult, MixSpec, MixTracker,
+                                  allocate_joint)
 from repro.core.capacity import HWSpec, THRESHOLDS, capacities
 from repro.core.fusion import adaptive_fusion_solve, fuse_graph
 from repro.core.graph import ModelGraph, build_lm_graph
@@ -14,6 +16,7 @@ from repro.core.solver import SolverConfig, solve, solve_validated
 from repro.core.streaming import HostModel, PreloadExecutor, StreamingExecutor
 
 __all__ = [
+    "AllocationResult", "MixSpec", "MixTracker", "allocate_joint",
     "HWSpec", "THRESHOLDS", "capacities", "adaptive_fusion_solve",
     "fuse_graph", "ModelGraph", "build_lm_graph", "OPGProblem", "OPGSolution",
     "check_constraints", "MultiModelPlan", "OverlapPlan", "plan_always_next",

@@ -256,7 +256,13 @@ class MultiModelPlan:
         executes, without the pair exceeding the global cap. ``reserve``
         holds back a fraction of the cap (the engine uses 10%: per-model
         peaks are plan-time estimates and pinning right up to the budget
-        starves the executor into pool-rejected transients)."""
+        starves the executor into pool-rejected transients). The result
+        is clamped at 0; ``reserve`` outside [0, 1] is a caller bug and
+        raises (a reserve > 1 silently produced negative budgets)."""
+        if not (isinstance(reserve, (int, float)) and math.isfinite(reserve)
+                and 0.0 <= reserve <= 1.0):
+            raise ValueError(f"reserve must be a finite fraction in [0, 1], "
+                             f"got {reserve!r}")
         return max(0, int((1.0 - reserve) * self.budget_bytes)
                    - self.peaks.get(current, 0))
 
@@ -312,55 +318,135 @@ class MultiModelPlan:
     @staticmethod
     def from_json(s: str) -> "MultiModelPlan":
         d = json.loads(s)
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"MultiModelPlan JSON must be an object, got {type(d).__name__}")
+        missing = [k for k in ("budget_bytes", "plans") if k not in d]
+        if missing:
+            raise ValueError(f"MultiModelPlan JSON missing required "
+                             f"key(s) {missing}; got keys {sorted(d)}")
         return MultiModelPlan(
-            budget_bytes=d["budget_bytes"],
+            budget_bytes=int(d["budget_bytes"]),
             plans={n: OverlapPlan.from_dict(pd)
                    for n, pd in d["plans"].items()},
             peaks={n: int(v) for n, v in d.get("peaks", {}).items()},
             meta=d.get("meta", {}))
 
 
-def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
-                     budget_bytes: int, hw: Optional[HWSpec] = None,
-                     solver_cfg=None, max_rounds: int = 4) -> MultiModelPlan:
-    """Solve one OverlapPlan per model such that every model's execution
-    peak (preload + streamed residency) fits the shared device budget.
+def _plan_one(g: ModelGraph, chunk_bytes: int, cap_bytes: int,
+              hw: Optional[HWSpec] = None, solver_cfg=None,
+              max_rounds: int = 4):
+    """Plan one model under its own byte cap; returns (peak, plan).
 
-    The per-model ``m_peak`` handed to the LC-OPG solver starts at the full
-    budget and shrinks by the solver's own preload choice each round —
-    preload grows under capacity fallbacks, so the loop re-solves with
-    ``m_peak = budget - preload`` until the combined peak fits (or rounds
-    run out; the achieved peak is recorded either way in ``peaks`` and the
-    per-model ``meta``)."""
+    The ``m_peak`` handed to the LC-OPG solver starts at the full cap and
+    shrinks by the solver's own preload choice each round — preload grows
+    under capacity fallbacks, so the loop re-solves with
+    ``m_peak = cap - preload`` until the execution peak (preload +
+    streamed residency) fits (or rounds run out; the best achieved peak
+    is returned either way and recorded in the plan's ``meta``)."""
     from repro.core.capacity import capacities
     from repro.core.opg import OPGProblem, residency_profile
     from repro.core.solver import solve
 
     hw = hw or HWSpec()
+    caps = capacities(g, chunk_bytes, hw)
+    cap_bytes = int(cap_bytes)
+    m_peak = cap_bytes
+    prev_m_peak = None
+    best = None                       # (peak, plan)
+    for _ in range(max_rounds):
+        if m_peak == prev_m_peak:     # refinement converged
+            break
+        prev_m_peak = m_peak
+        prob = OPGProblem(g, chunk_bytes, m_peak, caps)
+        sol = solve(prob, solver_cfg)
+        plan = OverlapPlan.from_solution(prob, sol)
+        peak = plan.preload_bytes(g) + max(
+            residency_profile(prob, sol), default=0)
+        plan.meta["exec_peak"] = peak
+        if best is None or peak < best[0]:
+            best = (peak, plan)
+        if peak <= cap_bytes:
+            break
+        m_peak = max(chunk_bytes, cap_bytes - plan.preload_bytes(g))
+    return best
+
+
+def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
+                     budget_bytes: int, hw: Optional[HWSpec] = None,
+                     solver_cfg=None, max_rounds: int = 4,
+                     mix=None, alloc_mode: str = "auto") -> MultiModelPlan:
+    """Solve one OverlapPlan per model such that every model's execution
+    peak (preload + streamed residency) fits the shared device budget.
+
+    Without ``mix`` every model plans against the FULL budget and shrinks
+    independently (the uniform baseline: correct for serialized execution,
+    blind to traffic). With ``mix`` (a ``core.allocator.MixSpec`` or a raw
+    ``{model: rate}`` dict) the per-model caps come from the joint
+    allocator instead: the budget is partitioned so the mix-weighted mean
+    of the analytic per-model latencies is minimized — hot models keep
+    resident bytes, cold models stream — and the split/mix/search
+    provenance is recorded in ``meta``. ``alloc_mode`` is forwarded to
+    ``allocate_joint`` ("auto" | "waterfill" | "brute")."""
+    hw = hw or HWSpec()
     mm = MultiModelPlan(budget_bytes=int(budget_bytes),
                         meta={"chunk_bytes": chunk_bytes})
+    caps_of = {n: int(budget_bytes) for n in graphs}
+    if mix is not None:
+        from repro.core.allocator import (BudgetInfeasibleError, MixSpec,
+                                          allocate_joint)
+        if not isinstance(mix, MixSpec):
+            mix = MixSpec.from_rates(dict(mix))
+        try:
+            alloc = allocate_joint(graphs, chunk_bytes, budget_bytes, mix,
+                                   hw=hw, solver_cfg=solver_cfg,
+                                   mode=alloc_mode)
+        except BudgetInfeasibleError as e:
+            # no partition exists (per-model floors exceed the budget):
+            # fall back to the uniform full-budget caps — serialized
+            # execution may still fit — and record why in meta instead of
+            # refusing to plan a pool the uniform path can serve
+            mm.meta.update({"mix": mix.as_dict(), "alloc_error": str(e)})
+        else:
+            caps_of = dict(alloc.split)
+            mm.meta.update({"mix": alloc.mix, "split": dict(alloc.split),
+                            "alloc_mode": alloc.mode,
+                            "alloc_cost_s": alloc.cost,
+                            "alloc_evals": alloc.evals})
+            prebuilt = (alloc.peaks, alloc.plans)
     for name, g in graphs.items():
-        caps = capacities(g, chunk_bytes, hw)
-        m_peak = int(budget_bytes)
-        prev_m_peak = None
-        best = None                       # (peak, plan)
-        for _ in range(max_rounds):
-            if m_peak == prev_m_peak:     # refinement converged
-                break
-            prev_m_peak = m_peak
-            prob = OPGProblem(g, chunk_bytes, m_peak, caps)
-            sol = solve(prob, solver_cfg)
-            plan = OverlapPlan.from_solution(prob, sol)
-            peak = plan.preload_bytes(g) + max(
-                residency_profile(prob, sol), default=0)
-            plan.meta["exec_peak"] = peak
-            if best is None or peak < best[0]:
-                best = (peak, plan)
-            if peak <= budget_bytes:
-                break
-            m_peak = max(chunk_bytes,
-                         int(budget_bytes) - plan.preload_bytes(g))
-        peak, plan = best
+        if mix is not None and "split" in mm.meta and name in prebuilt[1]:
+            # the allocator already solved this model at its final cap —
+            # reuse the plan instead of re-running the shrink loop
+            peak, plan = prebuilt[0][name], prebuilt[1][name]
+        else:
+            peak, plan = _plan_one(g, chunk_bytes, caps_of[name], hw,
+                                   solver_cfg, max_rounds)
+        if peak > int(budget_bytes) and caps_of[name] < int(budget_bytes):
+            # the allocator's arena share was infeasible for this model
+            # (capacity fallbacks forced more preload than the share
+            # allows) — fall back to the full-budget plan so the hard
+            # invariant, every model's execution peak fits the SHARED
+            # cap, survives the split
+            peak2, plan2 = _plan_one(g, chunk_bytes, int(budget_bytes), hw,
+                                     solver_cfg, max_rounds)
+            if peak2 < peak:
+                peak, plan = peak2, plan2
+                plan.meta["cap_fallback"] = True
+                if "split" in mm.meta:
+                    # keep the recorded partition honest: this model now
+                    # plans against the FULL budget, so downstream
+                    # consumers (bench split_mb, replan_log) must not
+                    # present an arena share that no longer holds
+                    mm.meta["split"][name] = int(budget_bytes)
+                    mm.meta.setdefault("cap_fallbacks", []).append(name)
+        if "split" in mm.meta and peak > mm.meta["split"].get(name, peak):
+            # achieved peak exceeds the arena share (but fits the shared
+            # cap): the partition guarantee is weakened for this model —
+            # record the overshoot rather than presenting a split the
+            # installed plan does not satisfy
+            mm.meta.setdefault("share_overshoot", {})[name] = \
+                int(peak) - int(mm.meta["split"][name])
         plan.model = name
         mm.plans[name] = plan
         mm.peaks[name] = int(peak)

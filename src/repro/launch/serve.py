@@ -25,6 +25,15 @@ requests are rejected up front instead of inflating tail latency:
     PYTHONPATH=src python -m repro.launch.serve \
         --models gptneo-s,gptneo-s --online --scheduler slo --slo-ms 250 \
         --rate 8 --duration 2 --budget-mb 256
+
+Mix-weighted mode — partition the shared pool budget by request mix via
+the joint allocator (``--mix``, aligned with ``--models``); with
+``--replan`` the online loop tracks the observed mix (EWMA arrival
+rates) and re-plans the split in the background when it drifts:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models gptneo-s,gptneo-s --online --budget-mb 256 \
+        --mix 8,1 --replan
 """
 from __future__ import annotations
 
@@ -73,14 +82,34 @@ def main(argv=None):
                     "arrival + slo; used by --scheduler slo)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--mix", default="",
+                    help="request-mix weights for the joint budget "
+                    "allocator, comma-separated and aligned with --models "
+                    "(e.g. --models a,b --mix 8,1). Empty = uniform "
+                    "iterative shrink (no joint split)")
+    ap.add_argument("--replan", action="store_true",
+                    help="online: track the observed mix (EWMA arrival "
+                    "rates) and re-plan the joint split in the background "
+                    "when it drifts; the new plan swaps in at a batch "
+                    "boundary, reusing pool-resident bytes")
+    ap.add_argument("--replan-drift", type=float, default=0.3,
+                    help="total-variation drift threshold that triggers "
+                    "an online re-plan (with --replan)")
     args = ap.parse_args(argv)
 
     names = args.models.split(",")
+    mix = None
+    if args.mix:
+        weights = [float(w) for w in args.mix.split(",")]
+        if len(weights) != len(names):
+            ap.error(f"--mix needs one weight per --models entry "
+                     f"({len(names)}), got {len(weights)}")
+        mix = {f"{n}#{i}": w for i, (n, w) in enumerate(zip(names, weights))}
     engine = ServingEngine(policy=args.policy,
                            m_peak=args.m_peak_mb << 20,
                            disk_bw=args.disk_gbps * 1e9,
                            budget_bytes=(args.budget_mb << 20) or None,
-                           eviction=args.eviction)
+                           eviction=args.eviction, mix=mix)
     rng = np.random.default_rng(0)
     for i, n in enumerate(names):
         cfg = get_arch(n).model
@@ -90,9 +119,18 @@ def main(argv=None):
 
     if args.online:
         vocab = min(m.cfg.vocab for m in engine.models.values())
-        trace = poisson_trace({n: args.rate for n in engine.models},
-                              args.duration, vocab=vocab, seq=args.seq,
-                              seed=0)
+        # with --mix, offered traffic follows the declared mix (mean rate
+        # preserved) so the joint split faces the load it was planned for
+        if mix is not None:
+            mean_w = sum(mix.values()) / len(mix)
+            # zero-weight models get NO arrivals (poisson_trace divides by
+            # the rate, so 0.0 must be dropped, not passed through)
+            rates = {n: args.rate * mix[n] / mean_w for n in engine.models
+                     if mix[n] > 0}
+        else:
+            rates = {n: args.rate for n in engine.models}
+        trace = poisson_trace(rates, args.duration, vocab=vocab,
+                              seq=args.seq, seed=0)
         # warm the jitted kernels first: the loop charges measured real
         # durations, and a first-call compile would otherwise poison both
         # the latency report and the SLO cost estimates
@@ -108,7 +146,8 @@ def main(argv=None):
             RequestStream.from_trace(trace), clock=clock,
             scheduler=args.scheduler, slo=slo,
             batcher=BatcherConfig(max_batch=args.max_batch,
-                                  max_wait_s=args.max_wait_ms / 1e3))
+                                  max_wait_s=args.max_wait_ms / 1e3),
+            replan=args.replan, replan_drift=args.replan_drift)
         for r in responses:
             if r.status == "rejected":
                 print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "
@@ -130,6 +169,10 @@ def main(argv=None):
                      f"miss_rate={deadline_miss_rate(responses):.2f} "
                      f"rejection_rate={rejection_rate(responses):.2f} "
                      f"preemptions={len(engine.preempt_log)}")
+        if args.replan:
+            swaps = sum(1 for e in engine.replan_log
+                        if e["event"] == "swap")
+            line += f" replans={swaps}"
         print(line)
         return responses, engine
 

@@ -78,6 +78,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.allocator import MixSpec, MixTracker
 from repro.core.capacity import HWSpec, capacities
 from repro.core.latency_model import BatchLatencyEstimator
 from repro.core.opg import OPGProblem
@@ -150,7 +151,9 @@ class ServingEngine:
                  budget_bytes: Optional[int] = None,
                  prefetch: bool = True,
                  interleave: Optional[bool] = None,
-                 eviction: str = "lru"):
+                 eviction: str = "lru",
+                 mix: Optional[MixSpec] = None,
+                 alloc_mode: str = "auto"):
         assert policy in ("stream", "preload")
         self.policy = policy
         self.chunk_bytes = chunk_bytes
@@ -160,6 +163,12 @@ class ServingEngine:
         self.solver_cfg = solver_cfg
         self.budget_bytes = budget_bytes
         self.eviction = eviction
+        # request-mix weighting for the joint budget allocator: with a mix,
+        # plan_multi_model partitions the shared budget across models by
+        # traffic share instead of shrinking each one under the full cap
+        self.mix = (mix if isinstance(mix, MixSpec) or mix is None
+                    else MixSpec.from_rates(dict(mix)))
+        self.alloc_mode = alloc_mode
         self.cache = WeightCache(budget_bytes, policy=eviction,
                                  disk_bw=disk_bw) if budget_bytes else None
         self.prefetch = prefetch and self.cache is not None
@@ -184,6 +193,11 @@ class ServingEngine:
         # deadline and every preemption point — scenario-test ground truth
         self.admission_log: List[tuple] = []  # (t, model, eta, deadline, kind)
         self.preempt_log: List[tuple] = []    # (t, model, op_idx)
+        # online re-planning observability (serve(replan=True)): every
+        # drift trigger and plan swap, with the cache-ledger snapshots
+        # that prove the swap reused resident bytes instead of evicting
+        self.replan_log: List[dict] = []
+        self.mix_tracker: Optional[MixTracker] = None
         self.cost_model: Optional[BatchLatencyEstimator] = None
         self._model_bytes_total: Dict[str, int] = {}
         self._executors: Dict[str, object] = {}
@@ -213,7 +227,8 @@ class ServingEngine:
             self.multi_plan = plan_multi_model(
                 {n: m.graph for n, m in self.models.items()},
                 self.chunk_bytes, self.budget_bytes, hw=self.hw,
-                solver_cfg=self.solver_cfg)
+                solver_cfg=self.solver_cfg, mix=self.mix,
+                alloc_mode=self.alloc_mode)
             self.plans = dict(self.multi_plan.plans)
         self._planned = True
 
@@ -471,6 +486,51 @@ class ServingEngine:
         for key in self._protected.pop(name, []):
             self.cache.release(key)
 
+    # -- online re-planning (serve(replan=True)) ---------------------------
+    def _replan_worker(self, mix: MixSpec, slot: dict):
+        """Background thread body: compute a fresh MultiModelPlan for the
+        observed mix. The result lands in ``slot`` and the serving loop
+        swaps it in at a batch boundary — planning never blocks serving."""
+        try:
+            slot["plan"] = plan_multi_model(
+                {n: m.graph for n, m in self.models.items()},
+                self.chunk_bytes, self.budget_bytes, hw=self.hw,
+                solver_cfg=self.solver_cfg, mix=mix,
+                alloc_mode=self.alloc_mode)
+        except Exception as e:  # noqa: BLE001 — surfaced via replan_log,
+            slot["error"] = e  # a planner bug must not strand the queue
+
+    def _swap_plan(self, new_mm: MultiModelPlan, now: float, mix: MixSpec):
+        """Install a re-planned MultiModelPlan at a batch boundary.
+
+        The shared pool is deliberately left untouched: every resident
+        entry of a still-registered model is bytes the new plan wants
+        (cache keys are (model, weight, chunk) — plan-independent), so
+        the swap reuses them instead of forcing evictions. The ledger
+        snapshots taken around the swap prove it moved zero bytes; the
+        mix-drift scenario test asserts on exactly this log entry."""
+        cache = self.cache
+        before = cache.stats_snapshot() if cache is not None else None
+        resident = cache.keys() if cache is not None else []
+        wanted = [k for k in resident
+                  if isinstance(k, tuple) and k and k[0] in new_mm.plans
+                  and k[1] in self.models[k[0]].graph.weights]
+        self.multi_plan = new_mm
+        self.plans = dict(new_mm.plans)
+        self._executors.clear()          # executors bind plans at build time
+        after = cache.stats_snapshot() if cache is not None else None
+        still_resident = cache is not None and \
+            all(cache.contains(k) for k in wanted)
+        self.replan_log.append({
+            "t": now, "event": "swap", "mix": mix.as_dict(),
+            "split": dict(new_mm.meta.get("split", {})),
+            "reused_keys": len(wanted),
+            "reused_bytes": sum(cache.model_bytes(n) for n in new_mm.plans)
+            if cache is not None else 0,
+            "wanted_still_resident": still_resident,
+            "ledger_before": before, "ledger_after": after})
+        self.mix = mix
+
     # -- execution ---------------------------------------------------------
     def run_all(self) -> List[Response]:
         self._ensure_planned()
@@ -515,7 +575,12 @@ class ServingEngine:
               slo: Optional[SLOConfig] = None,
               admission: Optional[bool] = None,
               preempt: Optional[bool] = None,
-              cost_model: Optional[BatchLatencyEstimator] = None
+              cost_model: Optional[BatchLatencyEstimator] = None,
+              replan: bool = False,
+              replan_drift: float = 0.3,
+              replan_min_observed: int = 8,
+              mix_halflife_s: float = 0.5,
+              replan_background: bool = True
               ) -> List[Response]:
         """Continuous arrival-aware loop: serve a live ``RequestStream``
         until it is closed and drained. Same-model arrivals inside the
@@ -547,7 +612,26 @@ class ServingEngine:
         policy) lets a running batch yield at an op boundary when a
         waiting queue would otherwise miss a strictly-earlier deadline;
         the suspended run keeps its loader, arrived chunks, and cache pins,
-        so resuming never re-streams resident bytes."""
+        so resuming never re-streams resident bytes.
+
+        ``replan=True`` turns on online mix-aware re-planning: every
+        arrival feeds an EWMA per-model rate tracker (``mix_halflife_s``
+        on the serving clock), and once at least ``replan_min_observed``
+        arrivals are in and the observed mix has drifted more than
+        ``replan_drift`` (total-variation distance) from the mix the
+        current plan was built for, a background thread re-runs the joint
+        allocator for the observed mix. The finished plan is swapped in
+        at a batch boundary; the shared pool is never cleared — resident
+        bytes the new plan still wants are reused, and the swap's ledger
+        snapshots (``replan_log``) prove no forced eviction happened.
+        ``replan_background=False`` plans synchronously at the trigger
+        boundary instead — serving pauses for the solve, but WHICH batch
+        boundary the swap lands on no longer depends on wall-clock solver
+        speed (SimClock replays and A/B benchmarks use this for
+        schedule-deterministic artifacts). A re-plan that fails is logged
+        (``event="failed"``) and disables re-planning for the rest of the
+        call — a persistent planner error must not retrigger every loop
+        iteration."""
         if scheduler not in SCHEDULERS:
             # a real error, not an assert: under `python -O` a stripped
             # assert would silently fall through to fifo scheduling
@@ -562,6 +646,16 @@ class ServingEngine:
             preempt = sched == "slo" and self.policy == "stream"
         cost = cost_model or BatchLatencyEstimator()
         self.cost_model = cost
+        # online re-planning state: the tracker sees every arrival for a
+        # registered model; a drift past the threshold kicks a background
+        # planning thread whose result is swapped in at a batch boundary
+        can_replan = (replan and self.policy == "stream"
+                      and self.cache is not None)
+        tracker = MixTracker(self.models, halflife_s=mix_halflife_s) \
+            if can_replan else None
+        self.mix_tracker = tracker
+        replan_thread: Optional[threading.Thread] = None
+        replan_slot: Optional[dict] = None
         pending: Dict[str, Deque[Request]] = {n: deque() for n in self.models}
         out: List[Response] = []
         last: Optional[str] = None
@@ -620,6 +714,10 @@ class ServingEngine:
                 # everything queued behind it
                 self.rejected.append(r)
                 return
+            if tracker is not None:
+                # observed OFFERED mix (rejected arrivals included): the
+                # split should follow traffic, not the admission filter
+                tracker.observe(r.model, now)
             d = deadline_of(r)
             if admission and math.isfinite(d):
                 # the in-flight batch delays r only if it finishes first
@@ -635,10 +733,55 @@ class ServingEngine:
                     return
             pending[r.model].append(r)
 
+        def finish_replan(now: float):
+            """Join the planning thread and swap its result in (or log the
+            failure and stop re-planning for this call — a persistent
+            planner error must not retrigger every iteration). Callers
+            only invoke this between batches."""
+            nonlocal replan_thread, replan_slot, can_replan
+            replan_thread.join()
+            err = replan_slot.get("error")
+            if err is not None:
+                self.replan_log.append({"t": now, "event": "failed",
+                                        "error": repr(err)})
+                can_replan = False
+            else:
+                self._swap_plan(replan_slot["plan"], now, replan_slot["mix"])
+            replan_thread, replan_slot = None, None
+
         while True:
             now = clock.now()
             for r in stream.poll(now):
                 admit(r, now)
+            if can_replan:
+                if (replan_thread is not None and suspended is None
+                        and not replan_thread.is_alive()):
+                    # batch boundary + plan ready: swap (pool untouched)
+                    finish_replan(now)
+                if (replan_thread is None
+                        and tracker.observed >= replan_min_observed
+                        # sync mode cannot swap over a suspended batch:
+                        # defer the TRIGGER itself so the swap boundary
+                        # stays wall-clock independent as documented
+                        and (replan_background or suspended is None)):
+                    ref = self.mix if self.mix is not None \
+                        else MixSpec.uniform(self.models)
+                    drift = tracker.drift(ref)
+                    if drift > replan_drift:
+                        mix_now = tracker.mix()
+                        replan_slot = {"mix": mix_now}
+                        self.replan_log.append(
+                            {"t": now, "event": "trigger", "drift": drift,
+                             "mix": mix_now.as_dict()})
+                        replan_thread = threading.Thread(
+                            target=self._replan_worker,
+                            args=(mix_now, replan_slot), daemon=True)
+                        replan_thread.start()
+                        if not replan_background:
+                            # deterministic mode: solve at THIS boundary
+                            # (trigger condition guarantees no suspended
+                            # batch is in flight)
+                            finish_replan(now)
             if not any(pending.values()) and suspended is None:
                 if stream.exhausted:
                     break
@@ -783,6 +926,11 @@ class ServingEngine:
                     batch_size=batch.size,
                     deadline_s=d if math.isfinite(d) else req.deadline_s))
             last = name
+        if replan_thread is not None:
+            # stream drained while planning was still in flight — finish
+            # the swap so the engine's plan matches the observed mix for
+            # whatever serves next
+            finish_replan(clock.now())
         return out
 
     # -- metrics -----------------------------------------------------------

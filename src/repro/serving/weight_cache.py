@@ -309,6 +309,19 @@ class WeightCache:
         with self._lock:
             return list(self._entries)
 
+    def stats_snapshot(self) -> dict:
+        """Atomic copy of the ledger counters — diff two snapshots to
+        prove what a critical section (e.g. the engine's online plan
+        swap) did to the pool: equal snapshots mean the section evicted,
+        removed, and inserted NOTHING."""
+        with self._lock:
+            return {"evictions": self.stats.evictions,
+                    "evicted_bytes": self.stats.evicted_bytes,
+                    "removals": self.stats.removals,
+                    "removed_bytes": self.stats.removed_bytes,
+                    "inserted_bytes": self.stats.inserted_bytes,
+                    "used_bytes": self._used}
+
     def ledger_balanced(self) -> bool:
         """inserted == resident + evicted + removed — exact byte accounting
         (the Pisarchyk/Lee shared-buffer motivation: when policies compete

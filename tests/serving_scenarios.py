@@ -134,6 +134,8 @@ class Scenario:
     preempt: Optional[bool] = None
     priors: Optional[Dict[str, float]] = None
     engine_kw: dict = field(default_factory=dict)
+    serve_kw: dict = field(default_factory=dict)   # extra serve() kwargs
+                                                   # (replan=, mix drift...)
 
     def priors_for(self, models) -> Dict[str, float]:
         if self.priors is not None:
@@ -152,7 +154,8 @@ class Scenario:
             RequestStream.from_trace(list(self.trace)), clock=clock,
             scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
             admission=self.admission, preempt=self.preempt,
-            cost_model=BatchLatencyEstimator(priors=self.priors_for(models)))
+            cost_model=BatchLatencyEstimator(priors=self.priors_for(models)),
+            **self.serve_kw)
         assert clock.now() >= max((r.arrival_s for r in self.trace),
                                   default=0.0)
         return ScenarioRun(engine=eng, clock=clock, responses=responses)

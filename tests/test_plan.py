@@ -1,5 +1,7 @@
 """OverlapPlan / MultiModelPlan serialization + multi-model planning under
 a global memory cap (core/plan.py)."""
+import json
+
 import numpy as np
 import pytest
 from dataclasses import replace
@@ -148,3 +150,43 @@ def test_prefetch_schedule_lookahead_bounds_depth_and_preload():
     # lookahead 0 schedules nothing at all
     assert mm.prefetch_schedule("yi", sizes, budget,
                                 lookahead_ops=0) == ([], [])
+
+
+# ---------------------------------------------------------------------------
+# validation regressions: prefetch_budget(reserve=) and from_json keys
+# ---------------------------------------------------------------------------
+
+def test_prefetch_budget_rejects_reserve_outside_unit_interval():
+    """Regression: reserve > 1 used to silently produce a negative
+    pre-clamp budget (and reserve < 0 an inflated one) instead of
+    flagging the caller bug."""
+    mm = MultiModelPlan(budget_bytes=100, peaks={"m": 40})
+    assert mm.prefetch_budget("m") == 60
+    assert mm.prefetch_budget("m", reserve=0.5) == 10
+    assert mm.prefetch_budget("m", reserve=1.0) == 0     # clamped, valid
+    assert mm.prefetch_budget("m", reserve=0.9) >= 0
+    for bad in (-0.1, 1.5, 2.0, float("nan"), float("inf"), "0.5", None):
+        with pytest.raises((ValueError, TypeError)):
+            mm.prefetch_budget("m", reserve=bad)
+    # unknown model still gets the (reserve-scaled) full headroom
+    assert mm.prefetch_budget("zzz", reserve=0.5) == 50
+
+
+def test_multi_model_plan_from_json_validates_required_keys():
+    """Regression: a missing budget_bytes/plans used to surface as a bare
+    KeyError deep in from_json; now it is a clear ValueError naming the
+    missing key(s)."""
+    g = _graph("whisper-small", seq=32)
+    mm = plan_multi_model({"w": g}, CHUNK, _budget(g), hw=HW)
+    d = json.loads(mm.to_json())
+    for missing in ("budget_bytes", "plans"):
+        broken = {k: v for k, v in d.items() if k != missing}
+        with pytest.raises(ValueError, match=missing):
+            MultiModelPlan.from_json(json.dumps(broken))
+    with pytest.raises(ValueError, match="object"):
+        MultiModelPlan.from_json("[1, 2]")
+    # peaks/meta stay optional (older artifacts load fine)
+    slim = {"budget_bytes": d["budget_bytes"], "plans": d["plans"]}
+    mm2 = MultiModelPlan.from_json(json.dumps(slim))
+    assert mm2.budget_bytes == mm.budget_bytes
+    assert mm2.peaks == {} and mm2.meta == {}

@@ -1,0 +1,158 @@
+"""Property-based seeded tests for plan_multi_model / MultiModelPlan
+invariants (random graphs x budgets x chunk sizes).
+
+Hypothesis is optional in this environment, so the layer is driven by
+seeded ``numpy`` generators instead: every case is a pure function of its
+seed, failures print the seed, and the suite is deterministic in CI. The
+invariants every returned plan must satisfy:
+
+  * ``fits_budget()`` — each model's execution peak under the shared cap;
+  * every weight covered — streamed chunks plus preload equal the graph;
+  * ``prefetch_budget(model, reserve)`` non-negative for all reserve in
+    [0, 1] (and a ValueError outside it);
+  * ``to_json`` / ``from_json`` round-trips exactly (byte-identical on a
+    second pass);
+  * with a mix, additionally: the recorded split partitions the budget
+    (sum <= budget, every cap >= its floor).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import MixSpec, plan_multi_model
+from repro.core.allocator import model_floor
+from repro.core.capacity import HWSpec
+from repro.core.graph import ModelGraph
+from repro.core.plan import MultiModelPlan
+
+HW = HWSpec(peak_flops=5e10, hbm_bw=2e10, stream_bw=1e10)
+
+# op kinds that carry weights, spanning all three load-tolerance classes
+_WEIGHT_KINDS = ("matmul", "conv", "embed", "layernorm")
+_PLAIN_KINDS = ("add", "activation", "softmax", "attention", "elementwise")
+
+
+def random_graph(rng: np.random.Generator, name: str) -> ModelGraph:
+    """A random linear op sequence: 6-24 ops, ~half consuming a fresh
+    weight of 1-64 KiB; op 0 sometimes owns a weight (the forced-preload
+    corner every feasible plan must honour)."""
+    g = ModelGraph(name)
+    n_ops = int(rng.integers(6, 25))
+    for i in range(n_ops):
+        if i == 0 and rng.random() < 0.5 or i > 0 and rng.random() < 0.5:
+            kind = str(rng.choice(_WEIGHT_KINDS))
+            wb = int(rng.integers(1, 65)) << 10
+            g.add_op(f"{name}.op{i}", kind, flops=float(rng.integers(1, 9)) * 1e7,
+                     act_bytes=float(rng.integers(1, 9)) * 1e4,
+                     weight_bytes=wb)
+        else:
+            kind = str(rng.choice(_PLAIN_KINDS))
+            g.add_op(f"{name}.op{i}", kind,
+                     flops=float(rng.integers(1, 9)) * 1e7,
+                     act_bytes=float(rng.integers(1, 9)) * 1e4)
+    g.validate()
+    return g
+
+
+def random_instance(seed: int):
+    """(graphs, chunk_bytes, budget_bytes) — budget drawn between the
+    feasibility margin (0.7x the largest model / forced preload + a few
+    chunks in flight, the same bound tests/test_plan.py uses, and the sum
+    of the allocator floors so a joint split exists) and ~1.3x the
+    largest model, so some instances force heavy streaming and some
+    barely stream at all."""
+    rng = np.random.default_rng(seed)
+    n_models = int(rng.integers(1, 4))
+    chunk = int(rng.choice([4, 8, 16, 32])) << 10
+    graphs = {f"m{i}": random_graph(rng, f"m{i}") for i in range(n_models)}
+
+    def feasible(g):
+        forced = sum(w.bytes for w in g.weights.values() if w.consumer == 0)
+        return max(int(0.7 * g.total_weight_bytes), forced + 8 * chunk)
+
+    low = max(max(feasible(g) for g in graphs.values()),
+              sum(model_floor(g, chunk) for g in graphs.values()))
+    hi = max(int(1.3 * max(g.total_weight_bytes for g in graphs.values())),
+             low + chunk)
+    budget = int(rng.integers(low, hi + 1))
+    return graphs, chunk, budget, rng
+
+
+def check_invariants(mm: MultiModelPlan, graphs, budget: int):
+    assert mm.fits_budget(), (mm.peaks, budget)
+    for name, g in graphs.items():
+        assert mm.peaks[name] <= budget
+        plan = mm.plans[name]
+        streamed = {t.weight for ts in plan.loads.values() for t in ts}
+        assert streamed | set(plan.preload) == set(g.weights), name
+        # prefetch budget is clamped non-negative across the whole
+        # reserve range, including the budget-exhausting endpoints
+        for reserve in (0.0, 0.25, 0.5, 0.9, 1.0):
+            assert mm.prefetch_budget(name, reserve=reserve) >= 0
+    # exact JSON round-trip, stable on a second pass
+    rt = MultiModelPlan.from_json(mm.to_json())
+    assert rt.to_json() == mm.to_json()
+    assert rt.budget_bytes == mm.budget_bytes
+    assert rt.peaks == mm.peaks and rt.order == mm.order
+    # to_json is valid, self-contained JSON (no NaN/inf leaks)
+    json.loads(mm.to_json())
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_plan_multi_model_invariants_random(seed):
+    graphs, chunk, budget, _rng = random_instance(seed)
+    mm = plan_multi_model(graphs, chunk, budget, hw=HW)
+    check_invariants(mm, graphs, budget)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_plan_multi_model_mix_invariants_random(seed):
+    graphs, chunk, budget, rng = random_instance(seed)
+    rates = {n: float(rng.integers(1, 10)) for n in graphs}
+    mm = plan_multi_model(graphs, chunk, budget, hw=HW, mix=rates)
+    check_invariants(mm, graphs, budget)
+    split = mm.meta["split"]
+    assert set(split) == set(graphs)
+    # the split partitions the budget — except models whose arena share
+    # proved infeasible and fell back to the full budget (recorded, so
+    # the meta never presents a partition that doesn't hold)
+    fellback = set(mm.meta.get("cap_fallbacks", []))
+    assert sum(v for n, v in split.items() if n not in fellback) <= budget
+    for n in fellback:
+        assert split[n] == budget
+        assert mm.plans[n].meta.get("cap_fallback") is True
+    for n, g in graphs.items():
+        if n not in fellback:
+            assert split[n] >= min(model_floor(g, chunk), budget)
+        assert isinstance(mm.peaks[n], int)
+        # a peak above the arena share must be recorded as overshoot —
+        # the meta never presents a partition the plan doesn't satisfy
+        over = mm.meta.get("share_overshoot", {})
+        if mm.peaks[n] > split[n]:
+            assert over.get(n) == mm.peaks[n] - split[n]
+        else:
+            assert n not in over
+    # the recorded mix is the normalized rate vector
+    mix = MixSpec.from_rates(rates)
+    assert mm.meta["mix"] == pytest.approx(mix.as_dict())
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_mix_weighting_is_scale_invariant(seed):
+    """Only proportions matter: rates x1 and x1000 allocate identically."""
+    graphs, chunk, budget, rng = random_instance(seed)
+    rates = {n: float(rng.integers(1, 10)) for n in graphs}
+    mm1 = plan_multi_model(graphs, chunk, budget, hw=HW, mix=rates)
+    mm2 = plan_multi_model(graphs, chunk, budget, hw=HW,
+                           mix={n: 1000.0 * r for n, r in rates.items()})
+    assert mm1.meta["split"] == mm2.meta["split"]
+    assert mm1.peaks == mm2.peaks
+    # identical caps -> identical per-model schedules (meta carries
+    # wall-clock solve_s and ulp-level mix floats, so compare structure)
+    def key(p):
+        return (p.model, p.chunk_bytes, p.preload,
+                {l: [(t.weight, t.chunk_lo, t.chunk_hi) for t in ts]
+                 for l, ts in p.loads.items()})
+    for n in graphs:
+        assert key(mm1.plans[n]) == key(mm2.plans[n])

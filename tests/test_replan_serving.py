@@ -1,0 +1,208 @@
+"""Online mix-aware re-planning scenarios (serve(replan=True)) on the
+SimClock harness — the ISSUE's acceptance scenario:
+
+  * a mix-drift replay triggers re-planning EXACTLY once;
+  * every output is bit-for-bit equal to the no-replan run of the same
+    trace (re-planning must never change what is computed);
+  * the WeightCache byte ledger proves the swap evicted nothing — every
+    resident chunk the new plan still wants stays resident through the
+    swap, and no key is ever re-streamed (re-inserted) because of it.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MixSpec
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.serving.clock import SimClock
+from repro.serving.engine import Request
+from repro.serving.stream import RequestStream
+from serving_scenarios import (EXEC, Scenario, assert_outputs_exact,
+                               build_models, make_engine, preload_refs, tok)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(("a", "b"))
+
+
+def drift_trace(rng, flip_s: float = 0.5, step: float = 0.03):
+    """Heavy `a` before ``flip_s``, heavy `b` after — one clean drift.
+    A trickle of `a` continues after the flip so the post-swap pool still
+    holds bytes BOTH plans want."""
+    trace = [Request("a", tok(rng), arrival_s=step * i) for i in range(12)]
+    trace += [Request("b", tok(rng), arrival_s=flip_s + step * i)
+              for i in range(12)]
+    trace += [Request("a", tok(rng), arrival_s=flip_s + step * i + 0.015)
+              for i in range(2)]
+    trace.sort(key=lambda r: r.arrival_s)
+    return trace
+
+
+def run_drift(models, trace, *, replan: bool, budget_frac: float = 1.5,
+              drift: float = 0.35):
+    """Generous budget (verified: zero evictions) so any byte that leaves
+    the pool during the run could only have been forced out by the swap."""
+    sc = Scenario(trace=list(trace), scheduler="fifo",
+                  budget_frac=budget_frac,
+                  engine_kw=dict(mix={"a": 8, "b": 1}),
+                  serve_kw=dict(replan=replan, replan_drift=drift))
+    return sc.run(models)
+
+
+def test_mix_drift_replans_exactly_once_bit_for_bit(models):
+    rng = np.random.default_rng(21)
+    trace = drift_trace(rng)
+    run = run_drift(models, trace, replan=True)
+    base = run_drift(models, trace, replan=False)
+
+    events = [e["event"] for e in run.engine.replan_log]
+    assert events.count("trigger") == 1, run.engine.replan_log
+    assert events.count("swap") == 1
+    assert "failed" not in events
+    assert not base.engine.replan_log          # control never re-plans
+
+    # the trigger fired after the flip, once the EWMA left the planned mix
+    trig = next(e for e in run.engine.replan_log if e["event"] == "trigger")
+    assert trig["t"] >= 0.5
+    assert trig["drift"] > 0.35
+    # the new split follows the new traffic: b now out-weighs a
+    swap = next(e for e in run.engine.replan_log if e["event"] == "swap")
+    assert swap["mix"]["b"] > swap["mix"]["a"]
+    assert swap["split"]["b"] > swap["split"]["a"]
+    assert run.engine.mix.weight("b") > run.engine.mix.weight("a")
+
+    # outputs: bit-for-bit equal to the no-replan run AND the solo
+    # preload references, response for response
+    assert len(run.responses) == len(base.responses) == len(trace)
+    for r, b in zip(run.responses, base.responses):
+        assert (r.model, r.arrival_s) == (b.model, b.arrival_s)
+        assert np.array_equal(np.asarray(r.result), np.asarray(b.result))
+    assert_outputs_exact(run.responses, preload_refs(models, trace))
+    # virtual-time schedule is unchanged too: same batches, same latencies
+    assert run.batch_models() == base.batch_models()
+    assert [r.latency_s for r in run.responses] == \
+        [r.latency_s for r in base.responses]
+
+
+def test_swap_ledger_proves_no_forced_eviction(models):
+    """The ledger half of the acceptance criterion: around the swap the
+    pool's eviction/removal/insert counters are IDENTICAL (the swap moved
+    zero bytes), every resident key the new plan wants survived, and —
+    with a generous budget — the whole run never evicted, so no
+    still-wanted chunk can have been dropped by re-planning."""
+    rng = np.random.default_rng(22)
+    trace = drift_trace(rng)
+    run = run_drift(models, trace, replan=True)
+    eng = run.engine
+    swap = next(e for e in eng.replan_log if e["event"] == "swap")
+    assert swap["ledger_before"] == swap["ledger_after"]
+    assert swap["wanted_still_resident"] is True
+    assert swap["reused_keys"] > 0 and swap["reused_bytes"] > 0
+    assert eng.cache.stats.evictions == 0      # no pressure: drop = bug
+    assert eng.cache.ledger_balanced()
+
+
+def test_replan_reuses_resident_bytes_no_reinsert(models):
+    """Counting inserts per key (the test_slo_serving ledger idiom): a
+    key inserted twice would mean the swap forced a still-wanted chunk
+    out and back in. With no eviction pressure, every pool key is
+    inserted exactly once across the whole re-planned run."""
+    rng = np.random.default_rng(23)
+    trace = drift_trace(rng)
+    eng = make_engine(models, budget_frac=1.5, mix=MixSpec.from_rates(
+        {"a": 8, "b": 1}))
+    inserts = {}
+    orig_put = eng.cache.put
+
+    def counting_put(key, value, nbytes, pin=False, restream_bytes=None):
+        ok = orig_put(key, value, nbytes, pin=pin,
+                      restream_bytes=restream_bytes)
+        if ok:
+            inserts[key] = inserts.get(key, 0) + 1
+        return ok
+
+    eng.cache.put = counting_put
+    responses = eng.serve(
+        RequestStream.from_trace(list(trace)),
+        clock=SimClock(exec_time=EXEC), replan=True, replan_drift=0.35,
+        cost_model=BatchLatencyEstimator(priors={n: EXEC for n in models}))
+    assert [e["event"] for e in eng.replan_log].count("swap") == 1
+    assert eng.cache.stats.evictions == 0
+    dup = {k: c for k, c in inserts.items() if c > 1}
+    assert not dup, f"re-planning re-streamed resident keys: {dup}"
+    assert_outputs_exact(responses, preload_refs(models, trace))
+
+
+def test_sync_replan_swaps_at_trigger_boundary(models):
+    """replan_background=False plans at the trigger boundary itself: the
+    swap lands at the same virtual time as the trigger, independent of
+    wall-clock solver speed — the schedule-deterministic benchmark mode."""
+    rng = np.random.default_rng(26)
+    trace = drift_trace(rng)
+    sc = Scenario(trace=list(trace), scheduler="fifo", budget_frac=1.5,
+                  engine_kw=dict(mix={"a": 8, "b": 1}),
+                  serve_kw=dict(replan=True, replan_drift=0.35,
+                                replan_background=False))
+    run = sc.run(models)
+    events = [(e["event"], e["t"]) for e in run.engine.replan_log]
+    assert [ev for ev, _t in events] == ["trigger", "swap"]
+    assert events[0][1] == events[1][1]        # same boundary, same t
+    assert_outputs_exact(run.responses, preload_refs(models, trace))
+
+
+def test_failed_replan_logged_once_and_disables_retrigger(models,
+                                                          monkeypatch):
+    """A planner error is logged as event="failed" and stops re-planning
+    for the rest of the call — no per-iteration retrigger storm — while
+    every request still gets served under the old plan."""
+    rng = np.random.default_rng(27)
+    trace = drift_trace(rng)
+    import repro.serving.engine as engine_mod
+
+    def boom(*a, **kw):
+        raise RuntimeError("solver exploded")
+
+    eng = make_engine(models, budget_frac=1.5,
+                      mix=MixSpec.from_rates({"a": 8, "b": 1}))
+    eng._ensure_planned()                      # plan BEFORE the sabotage
+    monkeypatch.setattr(engine_mod, "plan_multi_model", boom)
+    responses = eng.serve(
+        RequestStream.from_trace(list(trace)),
+        clock=SimClock(exec_time=EXEC), replan=True, replan_drift=0.35,
+        replan_background=False,
+        cost_model=BatchLatencyEstimator(priors={n: EXEC for n in models}))
+    events = [e["event"] for e in eng.replan_log]
+    assert events == ["trigger", "failed"]
+    failed = eng.replan_log[1]
+    assert "solver exploded" in failed["error"]
+    assert len([r for r in responses if r.status == "ok"]) == len(trace)
+    assert_outputs_exact(responses, preload_refs(models, trace))
+
+
+def test_no_replan_below_drift_threshold(models):
+    """A steady mix that matches the planned mix never triggers."""
+    rng = np.random.default_rng(24)
+    trace = [Request("a", tok(rng), arrival_s=0.03 * i) for i in range(16)]
+    trace += [Request("b", tok(rng), arrival_s=0.24 + 0.24 * i)
+              for i in range(2)]
+    trace.sort(key=lambda r: r.arrival_s)
+    run = run_drift(models, trace, replan=True)
+    assert [e["event"] for e in run.engine.replan_log] == []
+    assert run.engine.mix_tracker is not None
+    assert run.engine.mix_tracker.observed == len(trace)
+
+
+def test_replan_requires_stream_policy_and_pool(models):
+    """replan=True on a cache-less engine is a silent no-op (nothing to
+    re-plan against), never a crash."""
+    rng = np.random.default_rng(25)
+    trace = [Request("a", tok(rng), arrival_s=0.02 * i) for i in range(4)]
+    from repro.serving.engine import ServingEngine
+    eng = ServingEngine(policy="stream", chunk_bytes=16 << 10,
+                        budget_bytes=None)
+    for n, m in models.items():
+        eng.register(n, m)
+    responses = eng.serve(RequestStream.from_trace(list(trace)),
+                          clock=SimClock(exec_time=EXEC), replan=True)
+    assert len([r for r in responses if r.status == "ok"]) == len(trace)
+    assert eng.replan_log == [] and eng.mix_tracker is None
