@@ -1,0 +1,194 @@
+"""CI perf-regression gate: diff a fresh ``BENCH_*.json`` smoke artifact
+against its committed baseline in ``benchmarks/baselines/`` and exit
+nonzero past tolerance.
+
+The comparison is structural: every leaf present in the baseline must
+exist in the fresh artifact (a vanished metric is a schema regression),
+and numeric leaves are compared by RULE, not exact value — CI runners
+jitter, so times compare as ratios with a generous band, rates as
+absolute bands, and counts with a small slack. Keys added by newer code
+are ignored, so the gate never blocks adding metrics.
+
+Rules (key-name driven):
+  * ``*_rate`` / ``*_frac``      -> absolute band (default +/- 0.25)
+  * ``*_s`` / ``*_us`` floats    -> ratio within [1/tol, tol] (default 4x
+                                    — mix_shift carries measured
+                                    wall-clock latencies; the SimClock
+                                    benches are deterministic and pass
+                                    far inside the band)
+  * integers (requests, batches) -> ratio within tol (default 1.75x) OR
+                                    absolute slack +/- 3
+  * str                          -> exact equality
+  * bool                         -> mismatch WARNS but does not fail (A/B
+                                    verdict bits derive from measured
+                                    latencies and jitter with the runner;
+                                    the underlying times/rates are
+                                    already banded)
+  * null                         -> must stay null
+
+Usage (the ``stress-and-bench`` CI job runs this after each smoke run):
+
+    PYTHONPATH=src python benchmarks/check_regression.py \\
+        BENCH_slo_overload.json BENCH_mix_shift.json \\
+        BENCH_priority_overload.json
+
+``--update`` rewrites the committed baselines from the fresh artifacts
+instead of checking (run locally when a PR intentionally moves a
+number, then commit the diff).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).parent / "baselines"
+RATE_SUFFIXES = ("_rate", "_frac")
+TIME_SUFFIXES = ("_s", "_us")
+
+
+def classify(key: str, value) -> str:
+    if isinstance(value, bool):
+        return "bool"
+    if key.endswith(RATE_SUFFIXES):
+        return "rate"
+    if isinstance(value, int):
+        return "count"
+    if isinstance(value, float):
+        if key.endswith(TIME_SUFFIXES):
+            return "time"
+        return "count"
+    return "exact"
+
+
+def check_leaf(
+    path: str, base, fresh, tol: dict, violations: list, warnings: list
+) -> None:
+    def fail(rule: str) -> None:
+        violations.append((path, rule, base, fresh))
+
+    if base is None:
+        if fresh is not None:
+            fail("null")
+        return
+    if fresh is None:
+        fail("null")
+        return
+    if isinstance(base, (int, float)) and not isinstance(fresh, (int, float)):
+        fail("type")  # numeric leaf became a dict/list/str
+        return
+    kind = classify(path.rsplit(".", 1)[-1], base)
+    if kind == "bool":
+        if base != fresh:
+            warnings.append((path, "bool flip", base, fresh))
+        return
+    if kind == "exact":
+        if base != fresh:
+            fail("exact")
+        return
+    b, f = float(base), float(fresh)
+    if math.isnan(b) or math.isnan(f):
+        return  # NaN marks an empty cell; emptiness shows up in counts
+    if kind == "rate":
+        if abs(f - b) > tol["rate"]:
+            fail(f"rate band +/-{tol['rate']}")
+    elif kind == "count":
+        if abs(f - b) <= 3:
+            return
+        if b == 0 or not (1 / tol["count"] <= f / b <= tol["count"]):
+            fail(f"count ratio {tol['count']}x (slack 3)")
+    elif kind == "time":
+        if abs(b) < 1e-6 and abs(f) < 1e-3:
+            return
+        if b <= 0 or not (1 / tol["time"] <= f / b <= tol["time"]):
+            fail(f"time ratio {tol['time']}x")
+
+
+def walk(
+    path: str, base, fresh, tol: dict, violations: list, warnings: list
+) -> int:
+    """Compare every baseline leaf against the fresh tree; returns the
+    number of leaves checked. Keys only in ``fresh`` are ignored."""
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            violations.append((path, "type", type(base), type(fresh)))
+            return 0
+        n = 0
+        for k, v in base.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if k not in fresh:
+                violations.append((sub, "missing", v, None))
+                continue
+            n += walk(sub, v, fresh[k], tol, violations, warnings)
+        return n
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(base) != len(fresh):
+            violations.append((path, "list shape", base, fresh))
+            return 0
+        return sum(
+            walk(f"{path}[{i}]", b, f, tol, violations, warnings)
+            for i, (b, f) in enumerate(zip(base, fresh))
+        )
+    check_leaf(path, base, fresh, tol, violations, warnings)
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("fresh", nargs="+", help="fresh BENCH_*.json artifacts")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--tol-time", type=float, default=4.0)
+    ap.add_argument("--tol-count", type=float, default=1.75)
+    ap.add_argument("--tol-rate", type=float, default=0.25)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="overwrite the committed baselines with the fresh artifacts",
+    )
+    args = ap.parse_args(argv)
+    tol = {"time": args.tol_time, "count": args.tol_count, "rate": args.tol_rate}
+    baseline_dir = Path(args.baseline_dir)
+
+    failed = False
+    for fresh_path in map(Path, args.fresh):
+        base_path = baseline_dir / fresh_path.name
+        if args.update:
+            baseline_dir.mkdir(parents=True, exist_ok=True)
+            shutil.copyfile(fresh_path, base_path)
+            print(f"UPDATED {base_path}")
+            continue
+        if not base_path.exists():
+            print(f"FAIL {fresh_path.name}: no baseline at {base_path}")
+            failed = True
+            continue
+        with open(base_path) as fh:
+            base = json.load(fh)
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        violations: list = []
+        warnings: list = []
+        checked = walk("", base, fresh, tol, violations, warnings)
+        for path, rule, b, f in warnings:
+            print(
+                f"WARN {fresh_path.name} {path}: "
+                f"baseline={b!r} fresh={f!r} [{rule}]"
+            )
+        if violations:
+            failed = True
+            print(
+                f"FAIL {fresh_path.name}: {len(violations)} violation(s) "
+                f"over {checked} checked leaves"
+            )
+            for path, rule, b, f in violations:
+                print(f"  {path}: baseline={b!r} fresh={f!r} [{rule}]")
+        else:
+            print(f"OK   {fresh_path.name}: {checked} leaves within tolerance")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Row
 from repro.core.latency_model import (fit_latency_model, profile_ops)
@@ -53,7 +52,6 @@ def run():
         by_op.setdefault(m["op"], []).append(m)
     for op, ms in by_op.items():
         base = ms[0]["latency_s"]
-        worst = max(m["slowdown"] for m in ms)
         detail = " ".join(f"r{m['ratio']:g}={m['slowdown']:.2f}x" for m in ms)
         rows.append(Row(f"load_capacity/{op}", base * 1e6,
                         f"class={ms[0]['class']} {detail}"))

@@ -1,0 +1,232 @@
+"""Priority-weighted EDF + deadline-aware batching under overload.
+
+Replays one seeded Poisson trace with stamped per-request priorities
+(best-effort 0 / normal 1 / interactive 2) at 2x/4x the service rate
+through four scheduler variants on the same virtual timeline:
+
+  * ``edf``       — PR-3 plain EDF: priorities ignored (all weights 1),
+                    uncapped batching — the regression baseline;
+  * ``edf+cap``   — plain EDF plus the deadline-aware batch feasibility
+                    cap (a group stops admitting members once the grown
+                    batch's exec estimate would blow the tightest
+                    admitted deadline);
+  * ``wedf``      — priority-weighted EDF (weighted slack ordering,
+                    priority-aware admission/shedding), uncapped;
+  * ``wedf+cap``  — the full PR-5 configuration.
+
+The SimClock charges ``EXEC_S * (1 + BATCH_GROWTH * (size - 1))`` per
+batch — a fused pass slows as rows are added, which is exactly the
+regime where an uncapped late joiner blows the head's deadline — and the
+cost estimator is seeded with the same growth model, so every projection
+is bit-reproducible. Per-class metrics for the priority-blind baselines
+are computed by re-stamping each response with the priority its request
+carried in the weighted runs (keyed ``(model, arrival_s)``), so all four
+cells are judged on identical traffic.
+
+The expected shape (the ISSUE's acceptance criterion): at >= 2x overload
+``wedf+cap`` strictly reduces the high-priority bad rate (missed or
+rejected fraction of priority-2 traffic) vs ``edf``, while low-priority
+work is still served (no starvation — EDF's deadline aging guarantees
+it). Served outputs stay bit-for-bit equal to solo preload references.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only priority``
+Standalone JSON (the CI perf-trajectory artifact):
+``PYTHONPATH=src python -m benchmarks.priority_overload --smoke --out
+BENCH_priority_overload.json``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import SimClock
+from repro.serving.engine import ServingEngine
+from repro.serving.stream import (RequestStream, assign_priorities,
+                                  poisson_trace)
+from repro.serving.types import SLOConfig, deadline_miss_rate
+from repro.core.streaming import HostModel, PreloadExecutor
+
+SEQ = 32
+CHUNK = 64 << 10
+EXEC_S = 0.05          # virtual seconds per size-1 batch
+BATCH_GROWTH = 0.5     # each extra row adds 0.5 * EXEC_S to the fused pass
+SLO_S = 0.25           # deadline = arrival + SLO
+MAX_BATCH = 4
+PRIORITY_MIX = {0.0: 0.15, 1.0: 0.55, 2.0: 0.30}
+VARIANTS = {            # name -> (weighted priorities, batch cap)
+    "edf": (False, False),
+    "edf+cap": (False, True),
+    "wedf": (True, False),
+    "wedf+cap": (True, True),
+}
+
+
+def _models():
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    return {
+        "vision": HostModel.build(replace(base, name="vision", num_layers=2),
+                                  seq=SEQ, seed=0),
+        "asr": HostModel.build(replace(base, name="asr", num_layers=3),
+                               seq=SEQ, seed=1),
+        "lm": HostModel.build(replace(base, name="lm", num_layers=2),
+                              seq=SEQ, seed=2),
+    }
+
+
+def _trace(models, load_x: float, duration_s: float):
+    vocab = min(m.cfg.vocab for m in models.values())
+    per_model_rate = load_x / (EXEC_S * len(models))
+    trace = poisson_trace({n: per_model_rate for n in models}, duration_s,
+                          vocab=vocab, seq=SEQ, seed=13)
+    return assign_priorities(trace, PRIORITY_MIX, seed=17)
+
+
+def _serve(models, trace, budget, *, weighted: bool, capped: bool):
+    # the priority-blind baselines schedule the SAME trace with every
+    # weight forced to 1.0 (plain EDF); per-class metrics are restored
+    # afterwards from the stamped assignment
+    run_trace = trace if weighted \
+        else [replace(r, priority=1.0) for r in trace]
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK,
+                        budget_bytes=budget)
+    for n, m in models.items():
+        eng.register(n, m)
+    responses = eng.serve(
+        RequestStream.from_trace(list(run_trace)),
+        clock=SimClock(exec_time=EXEC_S, batch_growth=BATCH_GROWTH),
+        scheduler="slo", slo=SLOConfig(default_slo_s=SLO_S),
+        cost_model=BatchLatencyEstimator(priors={n: EXEC_S for n in models},
+                                         growth=BATCH_GROWTH),
+        batcher=BatcherConfig(max_batch=MAX_BATCH, max_wait_s=0.02),
+        batch_cap=capped)
+    stamped = {(r.model, r.arrival_s): r.priority for r in trace}
+    responses = [replace(r, priority=stamped[(r.model, r.arrival_s)])
+                 for r in responses]
+    return eng, responses
+
+
+def _metrics(eng, responses):
+    served = [r for r in responses if r.status == "ok"]
+    # an empty cell reads NaN, not a fake 0.0 latency — check_regression
+    # skips NaN leaves, and the served/requests counts surface emptiness
+    lats = np.array([r.latency_s for r in served]) if served \
+        else np.full(1, np.nan)
+    rep = eng.slo_report(responses)
+
+    def klass(lo, hi):
+        rs = [r for r in responses if lo <= r.priority < hi]
+        ok = [r for r in rs if r.status == "ok"]
+        bad = sum(1 for r in rs
+                  if r.status == "rejected" or r.deadline_met is False)
+        return {
+            "requests": len(rs),
+            "served_frac": len(ok) / len(rs) if rs else 0.0,
+            "miss_rate": deadline_miss_rate(rs),
+            "bad_rate": bad / len(rs) if rs else 0.0,
+        }
+
+    return {
+        "requests": rep["requests"],
+        "served": rep["served"],
+        "batches": len(eng.batch_log),
+        "p50_s": float(np.percentile(lats, 50)),
+        "p99_s": float(np.percentile(lats, 99)),
+        "miss_rate": rep["miss_rate"],
+        "rejection_rate": rep["rejection_rate"],
+        "priority_miss_rate": rep["priority_miss_rate"],
+        "preemptions": rep["preemptions"],
+        "deferred_joins": rep["deferred_joins"],
+        "high": klass(2.0, float("inf")),
+        "normal": klass(0.5, 2.0),
+        "best_effort": klass(0.0, 0.5),
+    }
+
+
+def sweep(loads=(2.0, 4.0), duration_s=1.2, check_exact=True) -> dict:
+    models = _models()
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    budget = int(0.6 * combined)
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    result = {"bench": "priority_overload", "exec_s": EXEC_S,
+              "batch_growth": BATCH_GROWTH, "slo_s": SLO_S,
+              "max_batch": MAX_BATCH, "budget_bytes": budget,
+              "duration_s": duration_s,
+              "priority_mix": {f"{p:g}": w for p, w in PRIORITY_MIX.items()},
+              "loads": {}}
+    for load in loads:
+        trace = _trace(models, load, duration_s)
+        refs = {(r.model, r.arrival_s):
+                np.asarray(ref_ex[r.model].run(r.tokens).result)
+                for r in trace} if check_exact else {}
+        cell = {}
+        for variant, (weighted, capped) in VARIANTS.items():
+            eng, responses = _serve(models, trace, budget,
+                                    weighted=weighted, capped=capped)
+            assert len(responses) == len(trace), (variant, load)
+            if check_exact:
+                for r in responses:
+                    if r.status != "ok":
+                        continue
+                    assert np.array_equal(np.asarray(r.result),
+                                          refs[(r.model, r.arrival_s)]), \
+                        f"{variant}@{load}x output diverged for {r.model}"
+            cell[variant] = _metrics(eng, responses)
+        # the acceptance shape: the full PR-5 config must not serve
+        # high-priority traffic worse than the PR-3 plain-EDF baseline
+        assert cell["wedf+cap"]["high"]["bad_rate"] \
+            <= cell["edf"]["high"]["bad_rate"], (load, cell)
+        result["loads"][f"{load:g}x"] = cell
+    return result
+
+
+def run():
+    result = sweep()
+    rows = []
+    for load, cell in result["loads"].items():
+        for variant, m in cell.items():
+            rows.append(Row(
+                f"priority_overload/{load}/{variant}", m["p50_s"] * 1e6,
+                f"served={m['served']}/{m['requests']} "
+                f"miss={m['miss_rate']:.2f} "
+                f"pmiss={m['priority_miss_rate']:.2f} "
+                f"hp_bad={m['high']['bad_rate']:.2f} "
+                f"lo_served={m['best_effort']['served_frac']:.2f} "
+                f"deferred={m['deferred_joins']}"))
+        base, full = cell["edf"], cell["wedf+cap"]
+        rows.append(Row(
+            f"priority_overload/{load}/delta", 0.0,
+            f"hp_bad_edf={base['high']['bad_rate']:.2f} "
+            f"hp_bad_wedf+cap={full['high']['bad_rate']:.2f} "
+            f"pmiss_edf={base['priority_miss_rate']:.2f} "
+            f"pmiss_wedf+cap={full['priority_miss_rate']:.2f}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast sweep (2x only) for CI artifacts")
+    ap.add_argument("--out", default="",
+                    help="write the sweep dict as JSON (BENCH_*.json)")
+    args = ap.parse_args(argv)
+    result = sweep(loads=(2.0,), duration_s=0.8) if args.smoke else sweep()
+    result["smoke"] = bool(args.smoke)
+    payload = json.dumps(result, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    print(payload)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Mapping to the paper (DESIGN.md §7):
     Fig 6    -> multi_model         Fig 7   -> ablation
     §4.4 online -> bursty_arrivals (scheduler × eviction A/B)
     §4.4 SLO    -> slo_overload (fifo vs slo vs static under overload)
+    §4.4 prio   -> priority_overload (weighted EDF × batch cap under overload)
     §4.4 mix    -> mix_shift (joint vs uniform budget split; re-planning)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
@@ -27,6 +28,7 @@ SUITES = [
     "multi_model",
     "bursty_arrivals",
     "slo_overload",
+    "priority_overload",
     "mix_shift",
     "ablation",
     "tradeoff",

@@ -85,7 +85,9 @@ def _serve(models, trace, budget, scheduler):
 
 def _metrics(eng, responses):
     served = [r for r in responses if r.status == "ok"]
-    lats = np.array([r.latency_s for r in served]) if served else np.zeros(1)
+    # empty cell reads NaN, not a fake 0.0 latency (PR-4 convention)
+    lats = np.array([r.latency_s for r in served]) if served \
+        else np.full(1, np.nan)
     return {
         "requests": len(responses),
         "served": len(served),

@@ -3,7 +3,6 @@ plot integrated latency vs average memory as an ASCII scatter.
 
     PYTHONPATH=src python examples/streaming_vs_preload_sweep.py
 """
-import numpy as np
 
 from repro.configs.gptneo import GPTNEO_S
 from repro.core import (OPGProblem, OverlapPlan, build_lm_graph, capacities,

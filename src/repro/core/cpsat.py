@@ -9,7 +9,6 @@ envelope. Objective identical to OPGSolution.objective.
 """
 from __future__ import annotations
 
-import itertools
 import math
 from typing import Dict, List, Optional, Tuple
 

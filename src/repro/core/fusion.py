@@ -10,13 +10,11 @@ refinement loop.
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, replace
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 from repro.core import capacity as cap_mod
-from repro.core.graph import (ELEMENTAL, HIERARCHICAL, REUSABLE, KIND_CLASS,
-                              ModelGraph, Op, WeightRef)
+from repro.core.graph import HIERARCHICAL, ModelGraph, Op, WeightRef
 from repro.core.opg import OPGProblem, OPGSolution
 from repro.core import solver as solver_mod
 

@@ -14,7 +14,7 @@ paper's "# Layers = low-level operator nodes after graph lowering").
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -201,22 +201,35 @@ class BatchLatencyEstimator:
     values after one observation — scheduling tests stay bit-reproducible),
     seeded with ``priors`` / ``prior_s`` before the first observation.
 
-    A padded batch executes as one fused pass, so the estimate is
-    per-batch, not per-request; ``batch_size`` is recorded for
-    observability but does not scale the estimate.
+    A padded batch executes as one fused pass; with the default
+    ``growth=0.0`` the estimate is per-batch and independent of
+    ``batch_size`` (the PR-3 behaviour). ``growth > 0`` models the fused
+    pass getting slower as rows are added — ``estimate(m, b)`` scales the
+    per-model base by ``1 + growth * (b - 1)`` and ``observe`` normalizes
+    the charged duration by the same factor, so the base EWMA stays a
+    size-1 quantity whatever mix of batch sizes was observed. This is the
+    size-dependence the deadline-aware batch cap reasons about: "would
+    admitting one more member blow the head's deadline?" is only a real
+    question when estimate(b+1) > estimate(b).
     """
 
     def __init__(self, prior_s: float = 0.05, alpha: float = 0.5,
-                 priors: Optional[Dict[str, float]] = None):
+                 priors: Optional[Dict[str, float]] = None,
+                 growth: float = 0.0):
         assert 0.0 < alpha <= 1.0, alpha
+        assert growth >= 0.0, growth
         self.prior_s = float(prior_s)
         self.alpha = float(alpha)
+        self.growth = float(growth)
         self._est: Dict[str, float] = {m: float(v)
                                        for m, v in (priors or {}).items()}
         self.observations: Dict[str, int] = {}
 
+    def _factor(self, batch_size: int) -> float:
+        return 1.0 + self.growth * max(0, int(batch_size) - 1)
+
     def observe(self, model: str, dt_s: float, batch_size: int = 1):
-        dt_s = float(dt_s)
+        dt_s = float(dt_s) / self._factor(batch_size)
         if model in self._est and self.observations.get(model, 0) > 0:
             self._est[model] += self.alpha * (dt_s - self._est[model])
         else:
@@ -224,4 +237,4 @@ class BatchLatencyEstimator:
         self.observations[model] = self.observations.get(model, 0) + 1
 
     def estimate(self, model: str, batch_size: int = 1) -> float:
-        return self._est.get(model, self.prior_s)
+        return self._est.get(model, self.prior_s) * self._factor(batch_size)

@@ -141,9 +141,6 @@ def simulate(plan: OverlapPlan, graph: ModelGraph, hw: Optional[HWSpec] = None,
             w = task.weight
             pending[w] = pending.get(w, 0) + b
             wref = graph.weights[w]
-            done = pending[w] >= min(wref.bytes,
-                                     math.ceil(wref.bytes / plan.chunk_bytes)
-                                     * plan.chunk_bytes)
             arrival[w] = load_t
             resident[w] = min(pending[w], wref.bytes)
         # wait for weights this op consumes

@@ -17,7 +17,7 @@ may be placed, keeping the active-constraint set O(window).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.opg import OPGProblem, OPGSolution, check_constraints

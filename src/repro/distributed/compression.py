@@ -12,8 +12,6 @@ shard_map when a mesh is present, and degrades to pure quantize/dequantize
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

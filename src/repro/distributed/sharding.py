@@ -12,7 +12,6 @@ Two rule sets exist per run:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional, Sequence
 

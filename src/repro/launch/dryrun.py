@@ -99,7 +99,7 @@ def main():
             [s for s in [args.shape] if s in supported]
         for skipped in arch.skipped_shapes():
             print(f"-- skip {name} x {skipped.name}: full-attention arch, "
-                  f"sub-quadratic shape (see DESIGN.md §6)")
+                  "sub-quadratic shape (see DESIGN.md §6)")
         for sn in shape_names:
             for mp in meshes:
                 key = (name, sn, "2x16x16" if mp else "16x16", args.tag)

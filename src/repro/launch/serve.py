@@ -26,6 +26,18 @@ requests are rejected up front instead of inflating tail latency:
         --models gptneo-s,gptneo-s --online --scheduler slo --slo-ms 250 \
         --rate 8 --duration 2 --budget-mb 256
 
+Priorities + deadline-aware batching (PR 5): ``--priority-mix`` stamps
+seeded per-request priority weights (weight:probability pairs; 0 =
+best-effort) that bend the EDF key — heavier requests run, admit, and
+survive shedding first — and ``--batch-cap`` controls the feasibility
+cap that stops a batch from growing past the point where its exec
+estimate would blow the tightest admitted deadline:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models gptneo-s,gptneo-s --online --scheduler slo --slo-ms 250 \
+        --rate 8 --duration 2 --budget-mb 256 \
+        --priority-mix 0:0.2,1:0.6,2:0.2 --batch-cap on
+
 Mix-weighted mode — partition the shared pool budget by request mix via
 the joint allocator (``--mix``, aligned with ``--models``); with
 ``--replan`` the online loop tracks the observed mix (EWMA arrival
@@ -47,9 +59,9 @@ from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.stream import RequestStream, poisson_trace
-from repro.serving.types import (SLOConfig, deadline_miss_rate,
-                                 rejection_rate)
+from repro.serving.stream import (RequestStream, assign_priorities,
+                                  poisson_trace)
+from repro.serving.types import SLOConfig
 
 
 def main(argv=None):
@@ -80,6 +92,17 @@ def main(argv=None):
     ap.add_argument("--slo-ms", type=float, default=250.0,
                     help="online: per-request latency SLO (deadline = "
                     "arrival + slo; used by --scheduler slo)")
+    ap.add_argument("--priority-mix", default="",
+                    help="online: seeded random per-request priority "
+                    "weights as weight:probability pairs, e.g. "
+                    "'0:0.2,1:0.6,2:0.2' (0 = best-effort). Empty = all "
+                    "priority 1.0 (plain EDF)")
+    ap.add_argument("--batch-cap", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="online: deadline-aware batch feasibility cap — "
+                    "a group stops admitting members once the grown "
+                    "batch's exec estimate would blow the tightest "
+                    "admitted deadline (auto = on under --scheduler slo)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--mix", default="",
@@ -102,7 +125,7 @@ def main(argv=None):
     if args.mix:
         weights = [float(w) for w in args.mix.split(",")]
         if len(weights) != len(names):
-            ap.error(f"--mix needs one weight per --models entry "
+            ap.error("--mix needs one weight per --models entry "
                      f"({len(names)}), got {len(weights)}")
         mix = {f"{n}#{i}": w for i, (n, w) in enumerate(zip(names, weights))}
     engine = ServingEngine(policy=args.policy,
@@ -131,6 +154,20 @@ def main(argv=None):
             rates = {n: args.rate for n in engine.models}
         trace = poisson_trace(rates, args.duration, vocab=vocab,
                               seq=args.seq, seed=0)
+        if args.priority_mix:
+            pmix = {}
+            for pair in args.priority_mix.split(","):
+                w, _, prob = pair.partition(":")
+                try:
+                    weight, p = float(w), float(prob or 1.0)
+                except ValueError:
+                    ap.error(f"--priority-mix: malformed pair {pair!r} "
+                             "(expected weight:probability, e.g. "
+                             "0:0.2,1:0.6,2:0.2)")
+                if weight in pmix:
+                    ap.error(f"--priority-mix: duplicate weight {w}")
+                pmix[weight] = p
+            trace = assign_priorities(trace, pmix, seed=1)
         # warm the jitted kernels first: the loop charges measured real
         # durations, and a first-call compile would otherwise poison both
         # the latency report and the SLO cost estimates
@@ -147,6 +184,8 @@ def main(argv=None):
             scheduler=args.scheduler, slo=slo,
             batcher=BatcherConfig(max_batch=args.max_batch,
                                   max_wait_s=args.max_wait_ms / 1e3),
+            batch_cap=(None if args.batch_cap == "auto"
+                       else args.batch_cap == "on"),
             replan=args.replan, replan_drift=args.replan_drift)
         for r in responses:
             if r.status == "rejected":
@@ -164,16 +203,30 @@ def main(argv=None):
                 f"p95 {np.percentile(lats, 95):.3f}s "
                 f"pool hit rate {engine.cache_hit_rate():.2f} "
                 f"scheduler={args.scheduler} eviction={args.eviction}")
+        detail = []
         if slo is not None:
+            rep = engine.slo_report(responses)
             line += (f" slo={args.slo_ms:.0f}ms "
-                     f"miss_rate={deadline_miss_rate(responses):.2f} "
-                     f"rejection_rate={rejection_rate(responses):.2f} "
-                     f"preemptions={len(engine.preempt_log)}")
+                     f"miss_rate={rep['miss_rate']:.2f} "
+                     f"rejection_rate={rep['rejection_rate']:.2f} "
+                     f"preemptions={rep['preemptions']} "
+                     f"deferred_joins={rep['deferred_joins']}")
+            if args.priority_mix:
+                line += (" priority_miss_rate="
+                         f"{rep['priority_miss_rate']:.2f}")
+                detail = [f"  priority={p:g}: {st['served']}/"
+                          f"{st['requests']} served "
+                          f"miss_rate={st['miss_rate']:.2f} "
+                          f"rejection_rate={st['rejection_rate']:.2f} "
+                          f"p50={st['p50_s']:.3f}s p99={st['p99_s']:.3f}s"
+                          for p, st in rep["per_priority"].items()]
         if args.replan:
             swaps = sum(1 for e in engine.replan_log
                         if e["event"] == "swap")
             line += f" replans={swaps}"
         print(line)
+        for d in detail:
+            print(d)
         return responses, engine
 
     keys = list(engine.models)

@@ -11,11 +11,9 @@ compression) -> async checkpointing -> straggler/preemption handling.
 from __future__ import annotations
 
 import argparse
-import time
 from dataclasses import replace
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
@@ -26,7 +24,6 @@ from repro.ft.resilience import PreemptionHandler, StragglerDetector, timed_step
 from repro.launch.mesh import make_env, make_host_mesh
 from repro.models import model as M
 from repro.training.optimizer import OptConfig, init_opt_state
-from repro.training.trainer import make_train_step
 
 
 def main(argv=None):

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, RunConfig
 from repro.distributed.sharding import MeshEnv, shard_map
 from repro.models import attention as attn
-from repro.models.layers import apply_mlp, apply_norm
+from repro.models.layers import apply_norm
 from repro.models.transformer import embed_tokens, logits_fn
 
 
@@ -51,7 +51,6 @@ def cp_prefill(cfg: ModelConfig, run: RunConfig, env: MeshEnv, params,
     b, s = tokens.shape
     hd = cfg.resolved_head_dim
     nq, nkv = cfg.n_heads, cfg.n_kv_heads
-    msize = mesh.shape["model"]
 
     x = embed_tokens(cfg, params, tokens, env)        # [B,S,D] seq-sharded
 

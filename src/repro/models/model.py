@@ -4,15 +4,13 @@ builders for the CPU smoke tests / examples.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ArchConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.configs.base import ArchConfig, ModelConfig, ShapeConfig
 from repro.distributed import sharding as shd
 from repro.distributed.sharding import MeshEnv, ParamSpec
 from repro.models import encdec, transformer

@@ -8,12 +8,9 @@ all-gather within the loop (ZeRO-3).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.distributed.sharding import MeshEnv, ParamSpec, is_spec

@@ -16,7 +16,7 @@ benchmarks) without real sleeps.
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional, Union
+from typing import Callable, Union
 
 
 class MonotonicClock:
@@ -29,7 +29,8 @@ class MonotonicClock:
         if dt > 0:
             time.sleep(dt)
 
-    def tick(self, real_dt: float, model: str = "", frac: float = 1.0) -> float:
+    def tick(self, real_dt: float, model: str = "", frac: float = 1.0,
+             batch_size: int = 1) -> float:
         return real_dt
 
 
@@ -41,13 +42,23 @@ class SimClock:
                     on a virtual arrival timeline);
       * float     — fixed virtual seconds per batch (fully deterministic);
       * callable  — ``f(model_name) -> seconds`` for skewed per-model rates.
+
+    ``batch_growth`` makes fixed/per-model charges batch-size dependent:
+    a batch of ``b`` rows charges ``exec_time * (1 + batch_growth*(b-1))``
+    — the virtual analogue of a fused pass slowing down as rows are added,
+    which is what makes deadline-aware batch capping observable in a
+    SimClock scenario (it mirrors ``BatchLatencyEstimator(growth=...)``,
+    so a matching estimator is exact from its priors). The default 0.0
+    keeps every PR-2/PR-3 schedule bit-identical.
     """
 
     def __init__(self, start: float = 0.0,
                  exec_time: Union[None, float,
-                                  Callable[[str], float]] = None):
+                                  Callable[[str], float]] = None,
+                 batch_growth: float = 0.0):
         self._t = float(start)
         self.exec_time = exec_time
+        self.batch_growth = float(batch_growth)
         self.slept_s = 0.0           # total idle time the loop waited out
 
     def now(self) -> float:
@@ -61,17 +72,20 @@ class SimClock:
     def advance(self, dt: float):
         self._t += max(0.0, dt)
 
-    def tick(self, real_dt: float, model: str = "", frac: float = 1.0) -> float:
+    def tick(self, real_dt: float, model: str = "", frac: float = 1.0,
+             batch_size: int = 1) -> float:
         """Charge one executed batch — or, with ``frac`` < 1, the fraction
         of it that ran before a preemption checkpoint. Fixed/per-model
-        ``exec_time`` charges scale by ``frac`` so a batch split into
-        segments charges exactly one batch's worth in total; measured real
-        durations (``exec_time=None``) are already per-segment."""
+        ``exec_time`` charges scale by ``frac`` (so a batch split into
+        segments charges exactly one batch's worth in total) and by the
+        ``batch_growth`` size factor; measured real durations
+        (``exec_time=None``) are already per-segment and per-size."""
+        scale = frac * (1.0 + self.batch_growth * max(0, int(batch_size) - 1))
         if self.exec_time is None:
             dt = real_dt
         elif callable(self.exec_time):
-            dt = float(self.exec_time(model)) * frac
+            dt = float(self.exec_time(model)) * scale
         else:
-            dt = float(self.exec_time) * frac
+            dt = float(self.exec_time) * scale
         self._t += max(0.0, dt)
         return dt

@@ -45,6 +45,16 @@ SLO-aware serving (PR 3) sits on top of the online loop:
     estimate (``BatchLatencyEstimator`` EWMA over clock-charged durations)
     minus the pool's restream cost for the model's cold chunks — so "which
     model runs next" accounts for weight-loading time, not just compute;
+    with per-request ``priority`` weights (PR 5) the key becomes
+    priority-WEIGHTED slack — a priority-p request's slack shrinks (or its
+    lateness amplifies) by p, so heavier work runs, admits, and survives
+    shedding first while EDF's deadline-driven aging still guarantees
+    lighter work is served as its own deadline approaches;
+  * batch formation is deadline-aware (PR 5): ``make_batch`` admits
+    members greedily only while the grown batch's exec estimate plus
+    restream cost still makes the tightest admitted deadline, so a late
+    joiner can never blow the head's deadline (excluded members are
+    requeued at the head of the line and logged in ``defer_log``);
   * long batches are preemptible at op (chunk-schedule) boundaries: the
     running ``StreamingExecutor`` yields when a waiting queue would
     otherwise miss a strictly-earlier deadline, and the suspended run's
@@ -90,7 +100,9 @@ from repro.serving.batcher import (Batch, BatcherConfig, can_join, make_batch,
                                    split_batch_result)
 from repro.serving.clock import MonotonicClock
 from repro.serving.stream import RequestStream
-from repro.serving.types import Request, Response, SLOConfig
+from repro.serving.types import (Request, Response, SLOConfig,
+                                 deadline_miss_rate, per_priority_stats,
+                                 priority_miss_rate, rejection_rate)
 from repro.serving.weight_cache import WeightCache
 
 __all__ = ["Request", "Response", "SLOConfig", "ModelReport",
@@ -99,18 +111,35 @@ __all__ = ["Request", "Response", "SLOConfig", "ModelReport",
 SCHEDULERS = ("fifo", "arrival", "static", "slo")   # "arrival" = fifo alias
 
 
+def weighted_urgency(latest_start: float, now: float,
+                     priority: float) -> float:
+    """The priority-weighted EDF key (smaller = runs first), expressed as
+    an absolute virtual time so queue heads and suspended batches compare
+    directly. ``latest_start`` is the plain-EDF key (deadline − exec
+    estimate − restream cost); its slack relative to ``now`` is divided by
+    the priority when positive (heavier work's headroom shrinks — it runs
+    earlier) and multiplied when negative (heavier work's lateness weighs
+    more — it recovers first). Priority 1 is exactly plain EDF; priority 0
+    (best-effort) and deadline-less work sort last (+inf)."""
+    if priority <= 0 or not math.isfinite(latest_start):
+        return math.inf
+    slack = latest_start - now
+    return now + (slack / priority if slack >= 0 else slack * priority)
+
+
 @dataclass
 class _RunningBatch:
     """One (possibly preempted-and-resumed) batch execution in serve().
 
     Carries the resumable executor state across a preemption plus the
     scheduling facts the engine needs to decide when to resume it: the
-    tightest member deadline and how much of its estimated execution
-    remains."""
+    tightest member deadline, the batch's priority weight, and how much
+    of its estimated execution remains."""
     name: str
     batch: Batch
     n_ops: int
     deadline_s: float = math.inf
+    priority: float = 1.0
     state: Optional[ExecState] = None
     t_start: float = 0.0
     started: bool = False
@@ -118,14 +147,20 @@ class _RunningBatch:
 
     def remaining_s(self, cost: BatchLatencyEstimator) -> float:
         if self.state is None:
-            return cost.estimate(self.name)
+            return cost.estimate(self.name, self.batch.size)
         left = max(0, self.n_ops - self.state.op_idx)
-        return cost.estimate(self.name) * left / max(self.n_ops, 1)
+        return cost.estimate(self.name, self.batch.size) \
+            * left / max(self.n_ops, 1)
 
     def effective_deadline(self, cost: BatchLatencyEstimator) -> float:
         """Latest virtual time the remaining work can start and still meet
         the batch deadline — the EDF key a suspended run competes with."""
         return self.deadline_s - self.remaining_s(cost)
+
+    def urgency(self, cost: BatchLatencyEstimator, now: float) -> float:
+        """Priority-weighted resume key (same scale as a queue head's)."""
+        return weighted_urgency(self.effective_deadline(cost), now,
+                                self.priority)
 
 
 @dataclass
@@ -193,6 +228,9 @@ class ServingEngine:
         # deadline and every preemption point — scenario-test ground truth
         self.admission_log: List[tuple] = []  # (t, model, eta, deadline, kind)
         self.preempt_log: List[tuple] = []    # (t, model, op_idx)
+        # deadline-aware batch cap observability: every group the cap
+        # truncated — (t, model, admitted_size, deferred_size)
+        self.defer_log: List[tuple] = []
         # online re-planning observability (serve(replan=True)): every
         # drift trigger and plan swap, with the cache-ledger snapshots
         # that prove the swap reused resident bytes instead of evicting
@@ -564,7 +602,7 @@ class ServingEngine:
                 avg_bytes=stats.avg_bytes, cache_hits=stats.cache_hits,
                 cache_misses=stats.cache_misses,
                 cache_hit_rate=stats.cache_hit_rate, result=result,
-                arrival_s=req.arrival_s))
+                arrival_s=req.arrival_s, priority=req.priority))
         return out
 
     def serve(self, stream: RequestStream, *,
@@ -575,6 +613,7 @@ class ServingEngine:
               slo: Optional[SLOConfig] = None,
               admission: Optional[bool] = None,
               preempt: Optional[bool] = None,
+              batch_cap: Optional[bool] = None,
               cost_model: Optional[BatchLatencyEstimator] = None,
               replan: bool = False,
               replan_drift: float = 0.3,
@@ -614,6 +653,28 @@ class ServingEngine:
         the suspended run keeps its loader, arrived chunks, and cache pins,
         so resuming never re-streams resident bytes.
 
+        ``batch_cap`` (default: on for "slo") makes batch formation
+        deadline-aware: a group stops admitting members as soon as the
+        grown batch's exec estimate (``cost_model.estimate(model, size)``)
+        plus the model's cold-chunk restream cost would overshoot the
+        tightest admitted deadline, so coalescing a late arrival can never
+        make the head miss. Excluded members are requeued at the head of
+        the model's queue (FIFO preserved) and every truncation is logged
+        in ``defer_log``. With slack deadlines the cap never binds and the
+        schedule is bit-for-bit the uncapped one.
+
+        Per-request ``priority`` weights (``Request.priority``, default
+        1.0) bend the "slo" policy toward heavier work: runnable queues
+        and each model's queue order by priority-weighted slack (a
+        priority-p request's positive slack is divided by p, its lateness
+        multiplied by p), admission counts only work that would actually
+        run before the newcomer under that weighted order, and shedding
+        therefore reaches hopeless low-priority heads first. Priority 0 is
+        best-effort: it sorts after all deadline work and is shed rather
+        than allowed to displace it. Because the primary key is still
+        slack, a low-priority request's urgency rises as its deadline
+        approaches (EDF aging) — heavy traffic cannot starve it forever.
+
         ``replan=True`` turns on online mix-aware re-planning: every
         arrival feeds an EWMA per-model rate tracker (``mix_halflife_s``
         on the serving clock), and once at least ``replan_min_observed``
@@ -644,6 +705,8 @@ class ServingEngine:
             admission = sched == "slo"
         if preempt is None:
             preempt = sched == "slo" and self.policy == "stream"
+        if batch_cap is None:
+            batch_cap = sched == "slo"
         cost = cost_model or BatchLatencyEstimator()
         self.cost_model = cost
         # online re-planning state: the tracker sees every arrival for a
@@ -676,27 +739,64 @@ class ServingEngine:
                 derived[id(r)] = d
             return d
 
-        def urgency(name: str) -> float:
-            # latest feasible start for this queue's head: deadline minus
-            # compute estimate minus cold-chunk restream time
-            return (deadline_of(pending[name][0]) - cost.estimate(name)
-                    - self._restream_cost_s(name))
+        def vd_of(r: Request) -> float:
+            """Priority-scaled virtual deadline — the time-invariant key a
+            model's queue is ordered by under "slo": ``arrival +
+            (deadline − arrival) / priority``. Priority 1 keeps the real
+            deadline (plain EDF, FIFO for equal SLOs); heavier requests
+            pull their virtual deadline toward arrival; priority 0 /
+            deadline-less work sorts last (+inf)."""
+            d = deadline_of(r)
+            if r.priority <= 0 or not math.isfinite(d):
+                return math.inf
+            return r.arrival_s + (d - r.arrival_s) / r.priority
 
-        def backlog_before(d: float) -> float:
+        def urgency(name: str, t: Optional[float] = None) -> float:
+            # latest feasible start for this queue's head (deadline minus
+            # compute estimate minus cold-chunk restream time), bent by
+            # the head's priority weight relative to ``t`` (the loop-top
+            # ``now`` by default; yield_check passes its prorated time)
+            head = pending[name][0]
+            lfs = (deadline_of(head) - cost.estimate(name)
+                   - self._restream_cost_s(name))
+            return weighted_urgency(lfs, now if t is None else t,
+                                    head.priority)
+
+        def backlog_before(r: Request) -> float:
             """Estimated seconds of queued+suspended work that will run
-            BEFORE a request with deadline ``d``. Under EDF only earlier-
-            or-equal deadlines go first; under fifo/static everything
-            already queued does."""
+            BEFORE ``r``. Under weighted EDF only work with an
+            earlier-or-equal priority-scaled virtual deadline goes first
+            — queued low-priority work does not block a heavy newcomer's
+            admission; under fifo/static everything already queued does."""
+            vd, d = vd_of(r), deadline_of(r)
             s = 0.0
-            if suspended is not None and (sched != "slo"
-                                          or suspended.deadline_s <= d):
-                s += suspended.remaining_s(cost)
+            if suspended is not None:
+                if sched != "slo":
+                    blocks = True
+                else:
+                    # the suspended run delays r only if weighted EDF
+                    # would actually resume it first — the same key the
+                    # resume decision uses, so a suspended best-effort
+                    # batch never inflates a heavy newcomer's ETA
+                    lfs = (d - cost.estimate(r.model)
+                           - self._restream_cost_s(r.model))
+                    blocks = suspended.urgency(cost, now) \
+                        <= weighted_urgency(lfs, now, r.priority)
+                if blocks:
+                    s += suspended.remaining_s(cost)
             for n, q in pending.items():
                 if not q:
                     continue
                 ahead = len(q) if sched != "slo" else \
-                    sum(1 for r2 in q if deadline_of(r2) <= d)
-                s += cost.estimate(n) * math.ceil(ahead / max_b)
+                    sum(1 for r2 in q if vd_of(r2) <= vd)
+                # price the backlog at the batch sizes it will actually
+                # form: under a growth-aware estimator a full batch
+                # charges more than a size-1 one (with growth=0 this is
+                # exactly ceil(ahead/max_b) * estimate)
+                full, rem = divmod(ahead, max_b)
+                s += full * cost.estimate(n, max_b)
+                if rem:
+                    s += cost.estimate(n, rem)
             return s
 
         def reject(r: Request, now: float, eta: float, kind: str):
@@ -705,7 +805,8 @@ class ServingEngine:
             self.admission_log.append((now, r.model, eta, d, kind))
             out.append(Response(r.model, max(0.0, now - r.arrival_s),
                                 0.0, 0.0, 0, status="rejected",
-                                arrival_s=r.arrival_s, deadline_s=d))
+                                arrival_s=r.arrival_s, deadline_s=d,
+                                priority=r.priority))
 
         def admit(r: Request, now: float, in_flight_s: float = 0.0,
                   in_flight_deadline: float = math.inf):
@@ -725,13 +826,28 @@ class ServingEngine:
                 # otherwise EDF yields to r at the next op boundary
                 blocking = in_flight_s if (not preempt
                                            or in_flight_deadline <= d) else 0.0
-                eta = (now + blocking + backlog_before(d)
+                eta = (now + blocking + backlog_before(r)
                        + cost.estimate(r.model)
                        + self._restream_cost_s(r.model))
                 if eta > d + 1e-9:
                     reject(r, now, eta, "infeasible")
                     return
-            pending[r.model].append(r)
+            q = pending[r.model]
+            if sched == "slo":
+                # weighted-EDF queue order (stable: equal keys keep FIFO);
+                # with uniform priorities and one SLO this IS arrival
+                # order. Scan from the right by ITERATION — deque
+                # indexing is O(n) per access and would make this
+                # quadratic per admit under a deep backlog.
+                key = (vd_of(r), r.arrival_s)
+                i = len(q)
+                for r2 in reversed(q):
+                    if (vd_of(r2), r2.arrival_s) <= key:
+                        break
+                    i -= 1
+                q.insert(i, r)
+            else:
+                q.append(r)
 
         def finish_replan(now: float):
             """Join the planning thread and swap its result in (or log the
@@ -803,15 +919,21 @@ class ServingEngine:
             name = self._pick_next_model(pending, last, sched, urg)
             if suspended is not None and (
                     name is None
-                    or suspended.effective_deadline(cost) <= urgency(name)):
-                # EDF says the suspended run's remaining work goes next
+                    or suspended.urgency(cost, now) <= urgency(name)):
+                # weighted EDF says the suspended run's remaining work
+                # goes next
                 item, suspended = suspended, None
                 name = item.name
             else:
                 q = pending[name]
                 if admission:
                     # shed heads whose deadline became hopeless while they
-                    # queued — an explicit rejection beats a guaranteed miss
+                    # queued — an explicit rejection beats a guaranteed
+                    # miss. The weighted-EDF queue order keeps heavier
+                    # work ahead, so low-priority work reaches the head
+                    # only once heavier work has drained — and is dropped
+                    # there (or refused at admission) instead of ever
+                    # being served into a miss ahead of it.
                     while q:
                         d = deadline_of(q[0])
                         eta = (now + cost.estimate(name)
@@ -823,13 +945,31 @@ class ServingEngine:
                     if not q:
                         continue
                 group = self._take_group(q, batcher)
-                batch = make_batch(group, batcher or BatcherConfig())
+                bcfg = batcher or BatcherConfig()
+                if batch_cap and len(group) > 1:
+                    # deadline-aware feasibility cap: stop admitting
+                    # members once the grown batch's estimate would blow
+                    # the tightest admitted deadline; excluded members go
+                    # back to the FRONT of the queue (FIFO preserved)
+                    batch = make_batch(
+                        group, bcfg, now=now,
+                        estimate=lambda k, _n=name: cost.estimate(_n, k),
+                        restream_cost_s=self._restream_cost_s(name),
+                        deadline_of=deadline_of)
+                    if batch.deferred:
+                        for r2 in reversed(batch.deferred):
+                            q.appendleft(r2)
+                        self.defer_log.append((now, name, batch.size,
+                                               len(batch.deferred)))
+                else:
+                    batch = make_batch(group, bcfg)
                 item = _RunningBatch(
                     name=name, batch=batch,
                     n_ops=len(self.models[name].graph.ops),
                     # the whole fused execution must land by the tightest
                     # member deadline (resolved through the SLO config)
-                    deadline_s=min(deadline_of(r) for r in batch.requests))
+                    deadline_s=min(deadline_of(r) for r in batch.requests),
+                    priority=batch.priority)
             prefetcher = pf_stop = None
             target, speculative = self._pick_prefetch_target(
                 pending, stream, name, sched, urg)
@@ -846,7 +986,7 @@ class ServingEngine:
             yield_check = None
             if preempt and suspended is None and self.policy == "stream":
                 seg_v0 = clock.now()
-                est_total = cost.estimate(name)
+                est_total = cost.estimate(name, item.batch.size)
                 n_ops, batch_deadline = item.n_ops, item.deadline_s
                 seg_entry_idx = item.state.op_idx if item.state else 0
 
@@ -865,7 +1005,11 @@ class ServingEngine:
                     cands = [n for n, qq in pending.items() if qq]
                     if not cands:
                         return False
-                    best = min(cands, key=urgency)
+                    # rank at the prorated op-boundary time, not the
+                    # stale loop-top now — the weighted key is
+                    # time-dependent when priorities differ
+                    best = min(cands,
+                               key=lambda n: urgency(n, projected))
                     d_best = deadline_of(pending[best][0])
                     if not math.isfinite(d_best):
                         return False
@@ -890,7 +1034,8 @@ class ServingEngine:
                 stats = ex.run(item.batch.tokens)
                 done, frac = True, 1.0
             seg_real = time.perf_counter() - seg_real_t0
-            item.charged_s += clock.tick(seg_real, name, frac=frac)
+            item.charged_s += clock.tick(seg_real, name, frac=frac,
+                                         batch_size=item.batch.size)
             self._stop_prefetch(prefetcher, pf_stop)
             if not done:
                 self.preempt_log.append((clock.now(), name,
@@ -924,7 +1069,8 @@ class ServingEngine:
                     arrival_s=req.arrival_s,
                     queue_s=max(0.0, t0 - req.arrival_s),
                     batch_size=batch.size,
-                    deadline_s=d if math.isfinite(d) else req.deadline_s))
+                    deadline_s=d if math.isfinite(d) else req.deadline_s,
+                    priority=req.priority))
             last = name
         if replan_thread is not None:
             # stream drained while planning was still in flight — finish
@@ -945,6 +1091,27 @@ class ServingEngine:
         hits = sum(s.cache_hits for s in self.stats_log)
         misses = sum(s.cache_misses for s in self.stats_log)
         return hits / (hits + misses) if hits + misses else 0.0
+
+    def slo_report(self, responses: List[Response]) -> dict:
+        """SLO/priority summary: global, priority-weighted, and
+        per-priority deadline outcomes over ``responses`` plus the
+        scheduler's intervention counts — the dict the benchmarks and
+        ``launch/serve.py`` print. Note the response-derived rates cover
+        exactly the ``responses`` passed in, while ``preemptions`` /
+        ``deferred_joins`` read the engine-LIFETIME logs (every log on
+        this engine accumulates across calls): pass one serve() run's
+        responses on a fresh engine — as the benchmarks do — for a
+        consistent picture."""
+        return {
+            "requests": len(responses),
+            "served": sum(1 for r in responses if r.status == "ok"),
+            "miss_rate": deadline_miss_rate(responses),
+            "rejection_rate": rejection_rate(responses),
+            "priority_miss_rate": priority_miss_rate(responses),
+            "per_priority": per_priority_stats(responses),
+            "preemptions": len(self.preempt_log),
+            "deferred_joins": sum(d for *_x, d in self.defer_log),
+        }
 
     def model_report(self) -> Dict[str, ModelReport]:
         """Per-model peak/avg memory and cache hit rate over run history."""

@@ -118,6 +118,27 @@ def poisson_trace(rates: Dict[str, float], duration_s: float, *,
     return reqs
 
 
+def assign_priorities(trace: Sequence[Request],
+                      mix: Dict[float, float], *, seed: int = 0
+                      ) -> List[Request]:
+    """Stamp seeded random priorities onto a trace: ``mix`` maps priority
+    weight -> probability (normalized). Returns NEW ``Request`` objects
+    (same tokens / arrivals / deadlines — tokens shared, not copied) so
+    the unstamped trace can be replayed as the uniform-priority baseline
+    while per-class metrics are still computed against this assignment
+    via ``(model, arrival_s)`` keys."""
+    from dataclasses import replace
+    rng = np.random.default_rng(seed)
+    levels = sorted(mix)
+    probs = np.array([mix[p] for p in levels], dtype=float)
+    total = probs.sum()
+    if total <= 0:
+        raise ValueError(f"priority mix has no mass: {mix}")
+    draws = rng.choice(len(levels), size=len(trace), p=probs / total)
+    return [replace(r, priority=float(levels[d]))
+            for r, d in zip(trace, draws)]
+
+
 def bursty_trace(base_rates: Dict[str, float], duration_s: float, *,
                  burst_model: str, burst_at_s: float, burst_n: int,
                  burst_span_s: float, vocab: int, seq: int,

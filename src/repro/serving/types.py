@@ -13,6 +13,15 @@ work is an explicit, observable outcome instead of silent tail-latency
 inflation. ``deadline_miss_rate`` / ``rejection_rate`` are the shared
 metric reductions the benchmarks and scenario tests both use, so A/B
 numbers always mean the same thing.
+
+Priorities (PR 5): a ``Request`` also carries a ``priority`` weight
+(default 1.0). Under ``scheduler="slo"`` the EDF key becomes
+priority-weighted (weighted slack; see ``engine.serve``), admission and
+shedding prefer dropping low-priority work first, and ``priority == 0``
+marks best-effort traffic that never displaces deadline work.
+``priority_miss_rate`` (priority-weighted misses) and
+``per_priority_stats`` (per-weight latency percentiles) are the matching
+metric reductions.
 """
 from __future__ import annotations
 
@@ -32,6 +41,14 @@ class Request:
     # absolute completion deadline on the serving clock (None = derive from
     # the engine's SLOConfig, or "no deadline" when no SLO is configured)
     deadline_s: Optional[float] = None
+    # scheduling weight: 1.0 = the PR-3 plain-EDF behaviour, > 1 shrinks the
+    # request's effective slack (runs/admits earlier), 0 = best-effort
+    # (served only when no deadline work competes, shed first)
+    priority: float = 1.0
+
+    def __post_init__(self):
+        if self.priority < 0:
+            raise ValueError(f"priority must be >= 0, got {self.priority}")
 
 
 @dataclass
@@ -55,6 +72,7 @@ class Response:
     # refused the request (result is None, latency_s is time-to-decision)
     status: str = "ok"
     deadline_s: Optional[float] = None
+    priority: float = 1.0
 
     @property
     def finish_s(self) -> float:
@@ -107,3 +125,40 @@ def rejection_rate(responses: Iterable[Response]) -> float:
     if not rs:
         return 0.0
     return sum(1 for r in rs if r.status == "rejected") / len(rs)
+
+
+def priority_miss_rate(responses: Iterable[Response]) -> float:
+    """Priority-WEIGHTED deadline miss rate: each judged response counts
+    with its priority, so a priority-2 miss hurts twice as much as a
+    priority-1 miss and best-effort (priority-0) work never moves the
+    number — the scalar the weighted-EDF scheduler is graded on."""
+    judged = [(r.priority, r.deadline_met) for r in responses
+              if r.deadline_met is not None]
+    total = sum(p for p, _ in judged)
+    if total <= 0:
+        return 0.0
+    return sum(p for p, met in judged if not met) / total
+
+
+def per_priority_stats(responses: Iterable[Response]) -> Dict[float, dict]:
+    """Per-priority-level breakdown: request counts, miss/rejection rates,
+    and served-latency percentiles — the engine report's view of how each
+    traffic class fared (high priority should miss less under overload,
+    low priority should still be served: the aging/starvation check)."""
+    by_p: Dict[float, list] = {}
+    for r in responses:
+        by_p.setdefault(float(r.priority), []).append(r)
+    out: Dict[float, dict] = {}
+    for p, rs in sorted(by_p.items()):
+        served = [r for r in rs if r.status == "ok"]
+        lats = np.array([r.latency_s for r in served], dtype=float)
+        out[p] = {
+            "requests": len(rs),
+            "served": len(served),
+            "rejected": sum(1 for r in rs if r.status == "rejected"),
+            "miss_rate": deadline_miss_rate(rs),
+            "rejection_rate": rejection_rate(rs),
+            "p50_s": float(np.percentile(lats, 50)) if served else float("nan"),
+            "p99_s": float(np.percentile(lats, 99)) if served else float("nan"),
+        }
+    return out

@@ -10,7 +10,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import ParamSpec, is_spec, spec_map
+from repro.distributed.sharding import ParamSpec, spec_map
 
 
 @dataclass(frozen=True)

@@ -27,7 +27,8 @@ from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.stream import RequestStream
+from repro.serving.stream import RequestStream, assign_priorities  # noqa: F401
+                                     # (re-exported for scenario tests)
 from repro.serving.types import Response, SLOConfig
 
 TINY_CFG = replace(GPTNEO_S, num_layers=2, d_model=64, n_heads=2,
@@ -132,6 +133,11 @@ class Scenario:
     slo: Optional[SLOConfig] = None
     admission: Optional[bool] = None
     preempt: Optional[bool] = None
+    batch_cap: Optional[bool] = None
+    # batch-size latency growth: applied identically to the SimClock's
+    # charge and the cost estimator, so the deadline-aware batch cap's
+    # projections are exact (a batch of b charges EXEC*(1+g*(b-1)))
+    batch_growth: float = 0.0
     priors: Optional[Dict[str, float]] = None
     engine_kw: dict = field(default_factory=dict)
     serve_kw: dict = field(default_factory=dict)   # extra serve() kwargs
@@ -149,12 +155,15 @@ class Scenario:
     def run(self, models: Dict[str, HostModel]) -> ScenarioRun:
         eng = make_engine(models, budget_frac=self.budget_frac,
                           **self.engine_kw)
-        clock = SimClock(exec_time=self.exec_time)
+        clock = SimClock(exec_time=self.exec_time,
+                         batch_growth=self.batch_growth)
         responses = eng.serve(
             RequestStream.from_trace(list(self.trace)), clock=clock,
             scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
             admission=self.admission, preempt=self.preempt,
-            cost_model=BatchLatencyEstimator(priors=self.priors_for(models)),
+            batch_cap=self.batch_cap,
+            cost_model=BatchLatencyEstimator(priors=self.priors_for(models),
+                                             growth=self.batch_growth),
             **self.serve_kw)
         assert clock.now() >= max((r.arrival_s for r in self.trace),
                                   default=0.0)
@@ -172,3 +181,5 @@ def overload_trace(models: Dict[str, HostModel], load_x: float,
     per_model_rate = load_x / (EXEC * len(models))
     return poisson_trace({n: per_model_rate for n in models}, duration_s,
                          vocab=TINY_CFG.vocab, seq=seq, seed=seed)
+
+

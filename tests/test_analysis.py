@@ -2,7 +2,7 @@
 import pytest
 
 from repro.analysis.hlo_parse import parse_hlo
-from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+from repro.analysis.roofline import (ICI_BW, PEAK_FLOPS,
                                      roofline_from_hlo_text)
 
 HLO = """\

@@ -1,17 +1,22 @@
 """batch_requests / make_batch / split_batch_result edge cases: padding
 for mixed sequence lengths, per-model FIFO, the max_wait_s window,
-cross-model isolation, and round-trip de-batching."""
+cross-model isolation, round-trip de-batching, input validation, and
+property-style seeded cases for the deadline-aware feasibility cap."""
+import math
+
 import numpy as np
+import pytest
 
 from repro.serving.batcher import (BatcherConfig, batch_requests,
-                                   group_requests, make_batch,
-                                   split_batch_result)
+                                   feasible_prefix, group_requests,
+                                   make_batch, split_batch_result)
 from repro.serving.types import Request
 
 
-def _req(model, seq, fill, t):
+def _req(model, seq, fill, t, deadline=None):
     return Request(model=model,
-                   tokens=np.full((1, seq), fill, np.int32), arrival_s=t)
+                   tokens=np.full((1, seq), fill, np.int32), arrival_s=t,
+                   deadline_s=deadline)
 
 
 def test_padding_correct_for_mixed_sequence_lengths():
@@ -81,3 +86,145 @@ def test_round_trip_debatching_restores_per_request_results():
     assert [p.shape for p in parts] == [(1, 3, 1), (1, 5, 1), (1, 2, 1)]
     for req, part in zip(reqs, parts):
         np.testing.assert_array_equal(part[..., 0], req.tokens * 10.0)
+
+
+# ---------------------------------------------------------------------------
+# input validation (regressions: empty groups / foreign results used to
+# be accepted silently — assert-only guards vanish under `python -O`)
+# ---------------------------------------------------------------------------
+
+def test_make_batch_rejects_empty_group():
+    with pytest.raises(ValueError, match="empty"):
+        make_batch([], BatcherConfig())
+
+
+def test_make_batch_rejects_cross_model_group():
+    with pytest.raises(ValueError, match="cross-model"):
+        make_batch([_req("a", 4, 0, 0.0), _req("b", 4, 1, 0.0)],
+                   BatcherConfig())
+
+
+def test_split_batch_result_rejects_row_count_mismatch():
+    batch = make_batch([_req("m", 3, 1, 0.0), _req("m", 4, 2, 0.1)],
+                       BatcherConfig())
+    with pytest.raises(ValueError, match="rows"):
+        split_batch_result(batch, np.zeros((5, 4)))     # batch had 2 rows
+
+
+def test_make_batch_feasibility_needs_now():
+    with pytest.raises(ValueError, match="now"):
+        make_batch([_req("m", 3, 1, 0.0)], BatcherConfig(),
+                   estimate=lambda k: 0.05 * k)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware feasibility cap
+# ---------------------------------------------------------------------------
+
+def _deadlined_group(n, head_deadline, others=math.inf):
+    ds = [head_deadline] + [others] * (n - 1)
+    return [_req("m", 4, i, 0.001 * i, deadline=ds[i]) for i in range(n)]
+
+
+def test_feasible_prefix_head_always_admitted():
+    # even a hopeless head is admitted — its feasibility is the admission
+    # controller's call, the batcher only guards against GROWING the batch
+    group = _deadlined_group(3, head_deadline=0.01)
+    assert feasible_prefix(group, now=0.0,
+                           estimate=lambda k: 0.05 * k) == 1
+
+
+def test_feasible_prefix_respects_tightest_admitted_deadline():
+    # the 2nd member carries a TIGHTER deadline than the head: admitting
+    # the 3rd must be judged against it, not just the head's
+    group = [_req("m", 4, 0, 0.00, deadline=1.0),
+             _req("m", 4, 1, 0.01, deadline=0.11),
+             _req("m", 4, 2, 0.02, deadline=1.0)]
+    # estimate(k) = 0.05k: 2 fit by t=0.10 <= 0.11, 3 need 0.15 > 0.11
+    assert feasible_prefix(group, now=0.0,
+                           estimate=lambda k: 0.05 * k) == 2
+
+
+def test_feasible_prefix_restream_cost_counts():
+    group = _deadlined_group(3, head_deadline=0.12, others=0.12)
+    est = lambda k: 0.05 * k                               # noqa: E731
+    assert feasible_prefix(group, now=0.0, estimate=est) == 2
+    # cold weights eat the same deadline budget
+    assert feasible_prefix(group, now=0.0, estimate=est,
+                           restream_cost_s=0.05) == 1
+
+
+def test_capped_batch_defers_tail_and_uncapped_is_identical():
+    cfg = BatcherConfig(max_batch=8, max_wait_s=1.0)
+    group = _deadlined_group(4, head_deadline=0.11)
+    capped = make_batch(group, cfg, now=0.0, estimate=lambda k: 0.05 * k)
+    assert capped.size == 2 and [r.tokens[0, 0] for r in capped.deferred] \
+        == [2, 3]                                # FIFO tail, FIFO order
+    # slack deadlines: the cap never binds — bit-for-bit the uncapped one
+    slack = make_batch(_deadlined_group(4, head_deadline=math.inf), cfg,
+                       now=0.0, estimate=lambda k: 0.05 * k)
+    plain = make_batch(_deadlined_group(4, head_deadline=math.inf), cfg)
+    assert not slack.deferred
+    np.testing.assert_array_equal(slack.tokens, plain.tokens)
+    assert slack.row_spans == plain.row_spans
+    assert slack.seq_lens == plain.seq_lens
+
+
+def test_property_cap_monotone_in_cost_and_deadline():
+    """Seeded property sweep: raising the estimator's cost (or the
+    restream cost) can only SHRINK the admitted prefix, and loosening
+    every deadline can only GROW it; the admitted prefix plus the
+    deferred tail is always the whole group in FIFO order."""
+    rng = np.random.default_rng(42)
+    cfg = BatcherConfig(max_batch=16, max_wait_s=10.0)
+    for case in range(50):
+        n = int(rng.integers(1, 9))
+        base = float(rng.uniform(0.01, 0.1))
+        growth = float(rng.uniform(0.0, 1.5))
+        deadlines = np.sort(rng.uniform(0.02, 0.6, size=n))
+        rng.shuffle(deadlines)
+        group = [_req("m", 4, i, 0.001 * i, deadline=float(deadlines[i]))
+                 for i in range(n)]
+
+        def est(k, scale=1.0):
+            return scale * base * (1 + growth * (k - 1))
+
+        k1 = feasible_prefix(group, now=0.0, estimate=est)
+        for scale in (1.5, 3.0, 10.0):
+            k2 = feasible_prefix(group, now=0.0,
+                                 estimate=lambda k: est(k, scale))
+            assert k2 <= k1, (case, scale, k1, k2)
+        rc = float(rng.uniform(0.0, 0.2))
+        assert feasible_prefix(group, now=0.0, estimate=est,
+                               restream_cost_s=rc) <= k1
+        loose = [_req("m", 4, i, 0.001 * i,
+                      deadline=float(deadlines[i]) + 1.0) for i in range(n)]
+        assert feasible_prefix(loose, now=0.0, estimate=est) >= k1
+        # round trip: admitted + deferred == group, order preserved
+        b = make_batch(group, cfg, now=0.0, estimate=est)
+        assert b.requests + b.deferred == group
+        assert b.size == k1
+
+
+def test_property_debatch_rows_and_content_consistent():
+    """Seeded property sweep: split_batch_result always returns one slice
+    per member whose rows/length match that member's submission, and
+    re-assembling the slices reproduces each request's tokens exactly
+    (the de-batched-latency consistency invariant at the data level)."""
+    rng = np.random.default_rng(7)
+    cfg = BatcherConfig(max_batch=16, max_wait_s=10.0)
+    for _ in range(25):
+        n = int(rng.integers(1, 7))
+        reqs = []
+        for i in range(n):
+            b = int(rng.integers(1, 4))
+            s = int(rng.integers(2, 9))
+            reqs.append(Request("m", rng.integers(0, 100, (b, s),
+                                                  dtype=np.int32),
+                                arrival_s=0.001 * i))
+        batch = make_batch(reqs, cfg)
+        assert batch.tokens.shape[0] == sum(r.tokens.shape[0] for r in reqs)
+        parts = split_batch_result(batch, batch.tokens)
+        assert len(parts) == n
+        for req, part in zip(reqs, parts):
+            np.testing.assert_array_equal(part, req.tokens)

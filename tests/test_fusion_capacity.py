@@ -1,9 +1,8 @@
 """Adaptive fusion (§4.3) + load-capacity model (§4.2) tests."""
 import numpy as np
-import pytest
 
 from repro.configs.gptneo import GPTNEO_S
-from repro.core.capacity import (HWSpec, THRESHOLDS, analytic_capacity_bytes,
+from repro.core.capacity import (HWSpec, analytic_capacity_bytes,
                                  capacities, model_capacity_bytes)
 from repro.core.fusion import (adaptive_fusion_solve, fuse_graph,
                                fused_capacities, split_op)

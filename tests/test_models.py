@@ -3,7 +3,6 @@ same-family config and runs one train step + prefill + decode on CPU,
 asserting output shapes and finiteness (deliverable f)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from dataclasses import replace
 

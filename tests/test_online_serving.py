@@ -342,8 +342,7 @@ def test_model_report_counts_requests_not_batches(models):
 
 
 def test_serve_with_cost_eviction_stays_exact_and_balanced(models):
-    from serving_scenarios import SEQ, TINY_CFG, combined_bytes
-    rng = np.random.default_rng(5)
+    from serving_scenarios import SEQ, TINY_CFG
     trace = poisson_trace({"a": 8.0, "b": 6.0, "c": 4.0}, 0.8,
                           vocab=TINY_CFG.vocab, seq=SEQ, seed=11)
     refs = preload_refs(models, trace)

@@ -2,7 +2,6 @@
 a global memory cap (core/plan.py)."""
 import json
 
-import numpy as np
 import pytest
 from dataclasses import replace
 

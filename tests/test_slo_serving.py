@@ -281,6 +281,38 @@ def test_queued_heads_shed_when_estimates_catch_up(models):
     assert all(r.deadline_met for r in run.served())
 
 
+def test_priority_zero_shed_before_any_priority2_miss(models):
+    """Best-effort (priority=0) traffic must be dropped before heavier
+    work ever misses: under sustained single-model overload every
+    priority-2 request is served within its deadline while the excess is
+    absorbed entirely by explicit priority-0 rejections — never by a
+    priority-2 miss and never by serving a priority-0 request late."""
+    rng = np.random.default_rng(12)
+    trace = []
+    # p2 at 80% of capacity (1/EXEC) — feasible on its own; p0 on top
+    # pushes the OFFERED load well past 1x
+    for i in range(8):
+        trace.append(Request("a", tok(rng), arrival_s=0.0625 * i,
+                             priority=2.0))
+    for i in range(12):
+        trace.append(Request("a", tok(rng), arrival_s=0.001 + 0.04 * i,
+                             priority=0.0))
+    trace.sort(key=lambda r: r.arrival_s)
+    run = Scenario(trace=trace, scheduler="slo",
+                   slo=SLOConfig(default_slo_s=3 * EXEC)).run(models)
+    assert len(run.responses) == len(trace)
+    hi = [r for r in run.responses if r.priority == 2.0]
+    lo = [r for r in run.responses if r.priority == 0.0]
+    assert len(hi) == 8 and len(lo) == 12
+    # every p2 request served, on time
+    assert all(r.status == "ok" and r.deadline_met for r in hi)
+    # the overload was absorbed by explicit p0 shedding, and no p0 was
+    # served into a miss
+    assert any(r.status == "rejected" for r in lo)
+    assert all(r.deadline_met is not False for r in lo)
+    assert run.miss_rate() == 0.0
+
+
 def test_admission_off_serves_everything(models):
     rng = np.random.default_rng(7)
     trace = [Request("a", tok(rng), arrival_s=0.001 * i) for i in range(8)]

@@ -10,10 +10,10 @@ import pytest
 
 from repro.checkpoint import ckpt
 from repro.data.pipeline import DataConfig, SyntheticLMStream
-from repro.distributed.compression import CompressionConfig, compress_tree
+from repro.distributed.compression import compress_tree
 from repro.ft.resilience import (ElasticController, PreemptionHandler,
                                  StragglerDetector)
-from repro.training.optimizer import (OptConfig, adamw_update, global_norm,
+from repro.training.optimizer import (OptConfig, adamw_update,
                                       init_opt_state, schedule)
 
 
@@ -65,7 +65,8 @@ def test_data_determinism_and_resume():
     cfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
     s1 = SyntheticLMStream(cfg)
     it1 = iter(s1)
-    batches = [next(it1) for _ in range(3)]
+    for _ in range(3):
+        next(it1)
     snap = s1.checkpoint()
     b3 = next(it1)
     s2 = SyntheticLMStream(cfg)
