@@ -11,6 +11,7 @@ Mapping to the paper (DESIGN.md §7):
     §4.4 SLO    -> slo_overload (fifo vs slo vs static under overload)
     §4.4 prio   -> priority_overload (weighted EDF × batch cap under overload)
     §4.4 mix    -> mix_shift (joint vs uniform budget split; re-planning)
+    §4.4 fleet  -> replica_fleet (affinity vs round-robin; breaker A/B)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
 """
@@ -30,6 +31,7 @@ SUITES = [
     "slo_overload",
     "priority_overload",
     "mix_shift",
+    "replica_fleet",
     "ablation",
     "tradeoff",
     "naive_overlap",

@@ -7,7 +7,6 @@ family-specific structure (GQA ratio, MoE top-k, hybrid interleave, ...).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional
 

@@ -28,7 +28,14 @@ import numpy as np
 
 
 class StragglerDetector:
-    """Flags hosts whose step times are persistent robust outliers."""
+    """Flags hosts whose step times are persistent robust outliers.
+
+    Only hosts that reported since the previous ``check()`` are compared
+    (and can accrue strikes): a host that stops reporting — departed,
+    preempted, or demoted — is pruned rather than frozen at its last
+    sample, so it re-joins with a clean slate instead of re-flagging
+    instantly off stale strike counts.
+    """
 
     def __init__(self, window: int = 32, z_thresh: float = 4.0,
                  patience: int = 3):
@@ -37,13 +44,22 @@ class StragglerDetector:
         self.patience = patience
         self.times: dict = {}
         self.strikes: dict = {}
+        self._fresh: set = set()      # hosts seen since the last check()
 
     def record(self, host: int, step_time_s: float):
         dq = self.times.setdefault(host, deque(maxlen=self.window))
         dq.append(step_time_s)
+        self._fresh.add(host)
 
     def check(self) -> list:
-        """Returns hosts currently flagged as stragglers."""
+        """Returns hosts currently flagged as stragglers (among hosts that
+        reported in the current window); prunes state for hosts absent
+        from it."""
+        for h in list(self.times):
+            if h not in self._fresh:
+                self.times.pop(h, None)
+                self.strikes.pop(h, None)
+        self._fresh.clear()
         lasts = {h: dq[-1] for h, dq in self.times.items() if dq}
         if len(lasts) < 3:
             return []
@@ -88,10 +104,12 @@ class ElasticEvent:
 class ElasticController:
     """Policy driver for membership changes.
 
-    mesh_builder(n_hosts) -> MeshEnv; restore_fn(env) -> (state, data_state);
-    both supplied by the launcher. The controller guarantees: no step is
-    double-applied (restore goes to the last committed step) and the data
-    stream resumes at exactly that step.
+    mesh_builder(n_hosts) -> MeshEnv; restore_fn(env) -> (state,
+    restore_step); both supplied by the launcher. ``restore_step`` is the
+    last committed step the checkpoint restore landed on — it is recorded
+    in the ``ElasticEvent`` and returned so the launcher resumes (and
+    re-seeds the data stream) at exactly that step, never double-applying
+    one.
     """
 
     def __init__(self, mesh_builder: Callable, restore_fn: Callable,

@@ -46,6 +46,16 @@ rates) and re-plans the split in the background when it drifts:
     PYTHONPATH=src python -m repro.launch.serve \
         --models gptneo-s,gptneo-s --online --budget-mb 256 \
         --mix 8,1 --replan
+
+Fleet mode (PR 6) — replay the trace through a multi-replica tier
+behind the cache-affinity Router instead of one engine. Each replica
+gets its OWN pool budget (the fleet is a partitioned weight cache);
+``--routing affinity`` keeps each model pinned to its consistent-hash
+home replica, ``--routing round_robin`` is the cache-oblivious control:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models gptneo-s,gptneo-s --online --replicas 3 \
+        --routing affinity --budget-mb 128 --rate 8 --duration 2
 """
 from __future__ import annotations
 
@@ -118,7 +128,23 @@ def main(argv=None):
     ap.add_argument("--replan-drift", type=float, default=0.3,
                     help="total-variation drift threshold that triggers "
                     "an online re-plan (with --replan)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="online: serve through a fleet of N replicas "
+                    "behind the cache-affinity Router (each replica gets "
+                    "its own --budget-mb pool)")
+    ap.add_argument("--routing", choices=["affinity", "round_robin"],
+                    default="affinity",
+                    help="fleet request routing: affinity = consistent-"
+                    "hash home replica with hot/cold spillover; "
+                    "round_robin = cache-oblivious control")
+    ap.add_argument("--timeout-ms", type=float, default=2000.0,
+                    help="fleet: per-attempt response timeout before the "
+                    "Router retries on a sibling (keep well above the "
+                    "real per-batch latency, or healthy replicas get "
+                    "treated as failed)")
     args = ap.parse_args(argv)
+    if args.replicas > 1 and not args.online:
+        ap.error("--replicas needs --online (the Router replays a trace)")
 
     names = args.models.split(",")
     mix = None
@@ -128,30 +154,35 @@ def main(argv=None):
             ap.error("--mix needs one weight per --models entry "
                      f"({len(names)}), got {len(weights)}")
         mix = {f"{n}#{i}": w for i, (n, w) in enumerate(zip(names, weights))}
-    engine = ServingEngine(policy=args.policy,
-                           m_peak=args.m_peak_mb << 20,
-                           disk_bw=args.disk_gbps * 1e9,
-                           budget_bytes=(args.budget_mb << 20) or None,
-                           eviction=args.eviction, mix=mix)
+    engine_kw = dict(policy=args.policy, m_peak=args.m_peak_mb << 20,
+                     disk_bw=args.disk_gbps * 1e9,
+                     budget_bytes=(args.budget_mb << 20) or None,
+                     eviction=args.eviction, mix=mix)
     rng = np.random.default_rng(0)
+    models = {}
     for i, n in enumerate(names):
         cfg = get_arch(n).model
         if args.layers:
             cfg = replace(cfg, num_layers=args.layers)
-        engine.register(f"{n}#{i}", HostModel.build(cfg, seq=args.seq, seed=i))
+        models[f"{n}#{i}"] = HostModel.build(cfg, seq=args.seq, seed=i)
+    engine = None
+    if args.replicas <= 1:
+        engine = ServingEngine(**engine_kw)
+        for nm, m in models.items():
+            engine.register(nm, m)
 
     if args.online:
-        vocab = min(m.cfg.vocab for m in engine.models.values())
+        vocab = min(m.cfg.vocab for m in models.values())
         # with --mix, offered traffic follows the declared mix (mean rate
         # preserved) so the joint split faces the load it was planned for
         if mix is not None:
             mean_w = sum(mix.values()) / len(mix)
             # zero-weight models get NO arrivals (poisson_trace divides by
             # the rate, so 0.0 must be dropped, not passed through)
-            rates = {n: args.rate * mix[n] / mean_w for n in engine.models
+            rates = {n: args.rate * mix[n] / mean_w for n in models
                      if mix[n] > 0}
         else:
-            rates = {n: args.rate for n in engine.models}
+            rates = {n: args.rate for n in models}
         trace = poisson_trace(rates, args.duration, vocab=vocab,
                               seq=args.seq, seed=0)
         if args.priority_mix:
@@ -171,7 +202,7 @@ def main(argv=None):
         # warm the jitted kernels first: the loop charges measured real
         # durations, and a first-call compile would otherwise poison both
         # the latency report and the SLO cost estimates
-        for m in engine.models.values():
+        for m in models.values():
             PreloadExecutor(m).run(rng.integers(0, m.cfg.vocab,
                                                 (1, args.seq),
                                                 dtype=np.int32))
@@ -179,6 +210,43 @@ def main(argv=None):
         clock = SimClock()
         slo = SLOConfig(default_slo_s=args.slo_ms / 1e3) \
             if args.scheduler == "slo" else None
+        if args.replicas > 1:
+            from repro.serving.replica import Replica
+            from repro.serving.router import Router
+            fleet = []
+            for rid in range(args.replicas):
+                rep = Replica(rid, **engine_kw)
+                for nm, m in models.items():
+                    rep.register(nm, m)
+                rep.start(scheduler=args.scheduler, slo=slo,
+                          batcher=BatcherConfig(
+                              max_batch=args.max_batch,
+                              max_wait_s=args.max_wait_ms / 1e3),
+                          batch_cap=(None if args.batch_cap == "auto"
+                                     else args.batch_cap == "on"),
+                          replan=args.replan,
+                          replan_drift=args.replan_drift)
+                fleet.append(rep)
+            router = Router(fleet, routing=args.routing,
+                            timeout_s=args.timeout_ms / 1e3)
+            responses = router.serve(trace, slo=slo)
+            for r in responses:
+                print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "
+                      f"queue {r.queue_s:6.3f}s "
+                      f"latency {r.latency_s:6.3f}s {r.status}")
+            frep = router.report(responses)
+            print(f"FLEET {args.replicas} replicas "
+                  f"routing={args.routing} "
+                  f"served {frep['served']}/{frep['requests']} "
+                  f"failed={frep['failed']} retries={frep['retries']} "
+                  f"miss_rate={frep['miss_rate']:.2f} "
+                  f"bad_rate={frep['bad_rate']:.2f} "
+                  f"restream_mb={frep['restream_bytes'] / 1e6:.1f}")
+            for rid, st in frep["per_replica"].items():
+                print(f"  r{rid}: batches={st['batches']} "
+                      f"restream_mb={st['restream_bytes'] / 1e6:.1f} "
+                      f"breaker={st['breaker']}")
+            return responses, router
         responses = engine.serve(
             RequestStream.from_trace(trace), clock=clock,
             scheduler=args.scheduler, slo=slo,

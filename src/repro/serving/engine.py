@@ -106,7 +106,7 @@ from repro.serving.types import (Request, Response, SLOConfig,
 from repro.serving.weight_cache import WeightCache
 
 __all__ = ["Request", "Response", "SLOConfig", "ModelReport",
-           "ServingEngine"]
+           "ServeSession", "ServingEngine"]
 
 SCHEDULERS = ("fifo", "arrival", "static", "slo")   # "arrival" = fifo alias
 
@@ -176,6 +176,98 @@ class ModelReport:
     def cache_hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+
+class ServeSession:
+    """One steppable ``serve()`` call: the engine's online loop as a
+    generator the caller advances, instead of a blocking drain.
+
+    ``serve()`` == ``ServeSession.run()`` — same responses, same logs,
+    same idle sleeps, bit-for-bit. The step form exists for the fleet
+    tier (``serving/router.py``): a Router holds one session per replica,
+    each on its own clock, and always steps the replica whose
+    ``next_time()`` is earliest — a deterministic single-threaded
+    discrete-event pump over N engines.
+
+    ``step()`` advances the loop to its next event and returns
+    ``(kind, payload)``:
+
+      * ``("batch", (model, charged_s))`` — a batch finished; its
+        responses were appended to ``responses``;
+      * ``("preempt", (model, op_idx))`` — the running batch yielded and
+        sits in ``suspended`` (clock already charged for the segment);
+      * ``("idle", next_arrival | None)`` — nothing runnable NOW. The
+        session does NOT sleep; the driver advances the clock (or pushes
+        work) and steps again;
+      * ``("done", None)`` — stream exhausted, every response collected.
+    """
+
+    def __init__(self, engine: "ServingEngine", stream: RequestStream,
+                 clock, poll_interval_s: float, **loop_kw):
+        self.engine = engine
+        self.stream = stream
+        self.clock = clock
+        self.poll_interval_s = poll_interval_s
+        self.responses: List[Response] = []
+        self.pending: Dict[str, Deque[Request]] = {}
+        self.suspended: Optional[_RunningBatch] = None
+        self.done = False
+        self.idle = False           # last step yielded "idle"
+        self._gen = engine._serve_loop(self, stream, clock, **loop_kw)
+
+    def step(self) -> Tuple[str, object]:
+        if self.done:
+            return ("done", None)
+        try:
+            kind, payload = next(self._gen)
+        except StopIteration:
+            self.done = True
+            self.idle = False
+            return ("done", None)
+        self.idle = kind == "idle"
+        return (kind, payload)
+
+    def queued(self) -> int:
+        """Admitted-but-unserved depth (queued requests + suspended batch
+        members) — the in-engine half of a replica's load."""
+        n = sum(len(q) for q in self.pending.values())
+        if self.suspended is not None:
+            n += self.suspended.batch.size
+        return n
+
+    def next_time(self) -> float:
+        """Earliest clock reading at which stepping can make progress:
+        ``now`` when work is runnable, the next pending arrival when the
+        loop idles for one, ``+inf`` when it can never progress again
+        (done, or an open stream with nothing queued). The Router's pump
+        key."""
+        if self.done:
+            return math.inf
+        if not self.idle:
+            return self.clock.now()
+        nxt = self.stream.next_arrival()
+        if nxt is not None:
+            return max(self.clock.now(), nxt)
+        # idle on an open, empty stream: blocked until someone pushes
+        return self.clock.now() if self.stream.exhausted else math.inf
+
+    def run(self) -> List[Response]:
+        """Drain to completion, sleeping through idle gaps exactly as the
+        pre-session ``serve()`` loop did."""
+        while True:
+            kind, payload = self.step()
+            if kind == "done":
+                return self.responses
+            if kind != "idle":
+                continue
+            if payload is not None:
+                gap = max(0.0, payload - self.clock.now())
+                # a live producer may push an earlier request at any
+                # moment: only a closed stream earns the full sleep
+                self.clock.sleep(gap if self.stream.closed
+                                 else min(gap, self.poll_interval_s))
+            else:                   # live stream, nothing queued yet
+                self.clock.sleep(self.poll_interval_s)
 
 
 class ServingEngine:
@@ -602,7 +694,8 @@ class ServingEngine:
                 avg_bytes=stats.avg_bytes, cache_hits=stats.cache_hits,
                 cache_misses=stats.cache_misses,
                 cache_hit_rate=stats.cache_hit_rate, result=result,
-                arrival_s=req.arrival_s, priority=req.priority))
+                arrival_s=req.arrival_s, priority=req.priority,
+                req_id=req.req_id))
         return out
 
     def serve(self, stream: RequestStream, *,
@@ -693,14 +786,64 @@ class ServingEngine:
         (``event="failed"``) and disables re-planning for the rest of the
         call — a persistent planner error must not retrigger every loop
         iteration."""
+        return self.serve_session(
+            stream, clock=clock, batcher=batcher, scheduler=scheduler,
+            poll_interval_s=poll_interval_s,
+            speculative_lookahead_ops=speculative_lookahead_ops, slo=slo,
+            admission=admission, preempt=preempt, batch_cap=batch_cap,
+            cost_model=cost_model, replan=replan, replan_drift=replan_drift,
+            replan_min_observed=replan_min_observed,
+            mix_halflife_s=mix_halflife_s,
+            replan_background=replan_background).run()
+
+    def serve_session(self, stream: RequestStream, *, clock=None,
+                      scheduler: str = "arrival",
+                      poll_interval_s: float = 0.001,
+                      **kw) -> "ServeSession":
+        """The steppable form of ``serve()``: build a ``ServeSession``
+        whose ``step()`` advances the loop by one event (executed batch
+        segment / idle point) and whose ``run()`` drains it to completion
+        — ``serve()`` is exactly ``serve_session(...).run()``. A fleet
+        driver (``serving/router.py``) interleaves many sessions on their
+        own clocks by stepping whichever replica's ``next_time()`` is
+        earliest, without threads and without the engine ever sleeping on
+        its own. Takes the same keyword arguments as ``serve()``."""
         if scheduler not in SCHEDULERS:
             # a real error, not an assert: under `python -O` a stripped
             # assert would silently fall through to fifo scheduling
             raise ValueError(f"unknown scheduler {scheduler!r}; "
                              f"expected one of {SCHEDULERS}")
+        return ServeSession(self, stream, clock or MonotonicClock(),
+                            poll_interval_s, scheduler=scheduler, **kw)
+
+    def _serve_loop(self, ses: "ServeSession", stream: RequestStream,
+                    clock, *, batcher: Optional[BatcherConfig] = None,
+                    scheduler: str = "arrival",
+                    speculative_lookahead_ops: int = 8,
+                    slo: Optional[SLOConfig] = None,
+                    admission: Optional[bool] = None,
+                    preempt: Optional[bool] = None,
+                    batch_cap: Optional[bool] = None,
+                    cost_model: Optional[BatchLatencyEstimator] = None,
+                    replan: bool = False,
+                    replan_drift: float = 0.3,
+                    replan_min_observed: int = 8,
+                    mix_halflife_s: float = 0.5,
+                    replan_background: bool = True):
+        """Generator body of the online loop (see ``serve`` for the full
+        contract). Yields control at every point the loop would otherwise
+        block or complete work — WITHOUT sleeping; the driver owns time:
+
+          * ``("idle", next_arrival | None)`` — nothing runnable; the
+            driver sleeps/advances the clock (``ServeSession.run`` exactly
+            reproduces the old in-loop sleeps);
+          * ``("batch", (model, charged_s))`` — one batch completed and
+            its responses were appended to ``ses.responses``;
+          * ``("preempt", (model, op_idx))`` — the running batch yielded
+            at an op boundary and now sits in ``ses.suspended``.
+        """
         sched = "fifo" if scheduler == "arrival" else scheduler
         self._ensure_planned()
-        clock = clock or MonotonicClock()
         if admission is None:
             admission = sched == "slo"
         if preempt is None:
@@ -719,10 +862,14 @@ class ServingEngine:
         self.mix_tracker = tracker
         replan_thread: Optional[threading.Thread] = None
         replan_slot: Optional[dict] = None
-        pending: Dict[str, Deque[Request]] = {n: deque() for n in self.models}
-        out: List[Response] = []
+        # queue + response state lives ON the session so a fleet driver
+        # can observe load / collect responses between steps; ses.suspended
+        # is the single preemption slot
+        pending = ses.pending
+        for n in self.models:
+            pending.setdefault(n, deque())
+        out = ses.responses
         last: Optional[str] = None
-        suspended: Optional[_RunningBatch] = None   # single preemption slot
         max_b = batcher.max_batch if batcher is not None else 1
 
         # deadlines derived from the SLOConfig live in a serve-local map —
@@ -770,7 +917,7 @@ class ServingEngine:
             admission; under fifo/static everything already queued does."""
             vd, d = vd_of(r), deadline_of(r)
             s = 0.0
-            if suspended is not None:
+            if ses.suspended is not None:
                 if sched != "slo":
                     blocks = True
                 else:
@@ -780,10 +927,10 @@ class ServingEngine:
                     # batch never inflates a heavy newcomer's ETA
                     lfs = (d - cost.estimate(r.model)
                            - self._restream_cost_s(r.model))
-                    blocks = suspended.urgency(cost, now) \
+                    blocks = ses.suspended.urgency(cost, now) \
                         <= weighted_urgency(lfs, now, r.priority)
                 if blocks:
-                    s += suspended.remaining_s(cost)
+                    s += ses.suspended.remaining_s(cost)
             for n, q in pending.items():
                 if not q:
                     continue
@@ -806,7 +953,7 @@ class ServingEngine:
             out.append(Response(r.model, max(0.0, now - r.arrival_s),
                                 0.0, 0.0, 0, status="rejected",
                                 arrival_s=r.arrival_s, deadline_s=d,
-                                priority=r.priority))
+                                priority=r.priority, req_id=r.req_id))
 
         def admit(r: Request, now: float, in_flight_s: float = 0.0,
                   in_flight_deadline: float = math.inf):
@@ -870,7 +1017,7 @@ class ServingEngine:
             for r in stream.poll(now):
                 admit(r, now)
             if can_replan:
-                if (replan_thread is not None and suspended is None
+                if (replan_thread is not None and ses.suspended is None
                         and not replan_thread.is_alive()):
                     # batch boundary + plan ready: swap (pool untouched)
                     finish_replan(now)
@@ -879,7 +1026,7 @@ class ServingEngine:
                         # sync mode cannot swap over a suspended batch:
                         # defer the TRIGGER itself so the swap boundary
                         # stays wall-clock independent as documented
-                        and (replan_background or suspended is None)):
+                        and (replan_background or ses.suspended is None)):
                     ref = self.mix if self.mix is not None \
                         else MixSpec.uniform(self.models)
                     drift = tracker.drift(ref)
@@ -898,31 +1045,27 @@ class ServingEngine:
                             # (trigger condition guarantees no suspended
                             # batch is in flight)
                             finish_replan(now)
-            if not any(pending.values()) and suspended is None:
+            if not any(pending.values()) and ses.suspended is None:
                 if stream.exhausted:
                     break
                 nxt_arrival = stream.next_arrival()
                 if nxt_arrival is not None:
                     self.idle_log.append((now, nxt_arrival))
-                    gap = max(0.0, nxt_arrival - now)
-                    # a live producer may push an earlier request at any
-                    # moment: only a closed stream earns the full sleep
-                    clock.sleep(gap if stream.closed
-                                else min(gap, poll_interval_s))
+                    yield ("idle", nxt_arrival)
                 elif stream.closed:
                     break
                 else:                       # live stream, nothing queued yet
                     self.idle_log.append((now, None))
-                    clock.sleep(poll_interval_s)
+                    yield ("idle", None)
                 continue
             urg = urgency if sched == "slo" else None
             name = self._pick_next_model(pending, last, sched, urg)
-            if suspended is not None and (
+            if ses.suspended is not None and (
                     name is None
-                    or suspended.urgency(cost, now) <= urgency(name)):
+                    or ses.suspended.urgency(cost, now) <= urgency(name)):
                 # weighted EDF says the suspended run's remaining work
                 # goes next
-                item, suspended = suspended, None
+                item, ses.suspended = ses.suspended, None
                 name = item.name
             else:
                 q = pending[name]
@@ -984,7 +1127,7 @@ class ServingEngine:
                 self.batch_log.append((item.t_start, name, item.batch.size))
                 item.started = True
             yield_check = None
-            if preempt and suspended is None and self.policy == "stream":
+            if preempt and ses.suspended is None and self.policy == "stream":
                 seg_v0 = clock.now()
                 est_total = cost.estimate(name, item.batch.size)
                 n_ops, batch_deadline = item.n_ops, item.deadline_s
@@ -1040,8 +1183,9 @@ class ServingEngine:
             if not done:
                 self.preempt_log.append((clock.now(), name,
                                          item.state.op_idx))
-                suspended = item
+                ses.suspended = item
                 last = name
+                yield ("preempt", (name, item.state.op_idx))
                 continue
             self._release_protection(name)
             cost.observe(name, item.charged_s, item.batch.size)
@@ -1070,14 +1214,14 @@ class ServingEngine:
                     queue_s=max(0.0, t0 - req.arrival_s),
                     batch_size=batch.size,
                     deadline_s=d if math.isfinite(d) else req.deadline_s,
-                    priority=req.priority))
+                    priority=req.priority, req_id=req.req_id))
             last = name
+            yield ("batch", (name, item.charged_s))
         if replan_thread is not None:
             # stream drained while planning was still in flight — finish
             # the swap so the engine's plan matches the observed mix for
             # whatever serves next
             finish_replan(clock.now())
-        return out
 
     # -- metrics -----------------------------------------------------------
     def peak_memory(self) -> int:

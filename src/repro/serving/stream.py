@@ -86,6 +86,12 @@ class RequestStream:
         with self._lock:
             return self._heap[0][0] if self._heap else None
 
+    def pending_count(self) -> int:
+        """Requests pushed but not yet polled (the router's inbox-depth
+        component of a replica's load)."""
+        with self._lock:
+            return len(self._heap)
+
     def peek_upcoming(self, n: int = 8) -> List[Request]:
         """Up to ``n`` earliest pending requests WITHOUT popping them."""
         with self._lock:
@@ -108,6 +114,11 @@ def poisson_trace(rates: Dict[str, float], duration_s: float, *,
     rng = np.random.default_rng(seed)
     reqs: List[Request] = []
     for model, rate in rates.items():
+        # non-positive rates mean "no arrivals" (launch/serve.py --mix
+        # drops zero-weight models the same way): rate == 0 would divide
+        # by zero below, and rate < 0 would step time backwards forever
+        if rate <= 0:
+            continue
         t = 0.0
         while True:
             t += float(rng.exponential(1.0 / rate))
@@ -150,7 +161,12 @@ def bursty_trace(base_rates: Dict[str, float], duration_s: float, *,
     rng = np.random.default_rng(seed + 1)
     step = burst_span_s / max(burst_n, 1)
     for i in range(burst_n):
-        reqs.append(_mk_request(burst_model, burst_at_s + i * step,
-                                rng, vocab, seq))
+        t = burst_at_s + i * step
+        # a burst whose span crosses the end of the trace would stamp
+        # arrivals past duration_s — outside the window every consumer
+        # (and the Poisson background above) guarantees; drop them
+        if t >= duration_s:
+            break
+        reqs.append(_mk_request(burst_model, t, rng, vocab, seq))
     reqs.sort(key=lambda r: r.arrival_s)
     return reqs

@@ -45,6 +45,11 @@ class Request:
     # request's effective slack (runs/admits earlier), 0 = best-effort
     # (served only when no deadline work competes, shed first)
     priority: float = 1.0
+    # caller-assigned correlation id, echoed on the Response. The engine
+    # never reads it; the fleet Router uses it to match terminal responses
+    # to tracked requests across retries (a retry is a NEW Request object
+    # with the same req_id)
+    req_id: Optional[int] = None
 
     def __post_init__(self):
         if self.priority < 0:
@@ -73,6 +78,8 @@ class Response:
     status: str = "ok"
     deadline_s: Optional[float] = None
     priority: float = 1.0
+    # echo of Request.req_id (None when the caller didn't assign one)
+    req_id: Optional[int] = None
 
     @property
     def finish_s(self) -> float:

@@ -105,6 +105,34 @@ def test_trace_generators_are_seeded_and_sorted():
     assert all(x.arrival_s <= y.arrival_s for x, y in zip(bt, bt[1:]))
 
 
+def test_poisson_trace_skips_non_positive_rates():
+    """Rate 0 means 'no arrivals' (like launch/serve.py --mix) — it must
+    not divide by zero; negative rates must not spin forever."""
+    t = poisson_trace({"a": 5.0, "b": 0.0, "c": -1.0}, 2.0,
+                      vocab=64, seq=8, seed=3)
+    assert t and all(r.model == "a" for r in t)
+    # the zero-rate model's skip must not perturb the live model's stream
+    only_a = poisson_trace({"a": 5.0}, 2.0, vocab=64, seq=8, seed=3)
+    assert [r.arrival_s for r in t] == [r.arrival_s for r in only_a]
+    assert poisson_trace({"b": 0.0}, 2.0, vocab=64, seq=8, seed=3) == []
+
+
+def test_bursty_trace_clamps_burst_to_duration():
+    """A burst whose span crosses the end of the trace drops the
+    out-of-window arrivals instead of stamping them past duration_s."""
+    bt = bursty_trace({"a": 2.0}, 1.0, burst_model="b", burst_at_s=0.9,
+                      burst_n=8, burst_span_s=0.4, vocab=64, seq=8, seed=1)
+    bursts = [r for r in bt if r.model == "b"]
+    # step = 0.05: arrivals 0.9 and 0.95 fit, 1.0 (== duration) and later
+    # do not — the window is [0, duration_s), matching poisson_trace
+    assert [r.arrival_s for r in bursts] == pytest.approx([0.9, 0.95])
+    assert all(r.arrival_s < 1.0 for r in bt)
+    # a burst entirely past the end contributes nothing
+    late = bursty_trace({"a": 2.0}, 1.0, burst_model="b", burst_at_s=1.5,
+                        burst_n=4, burst_span_s=0.1, vocab=64, seq=8, seed=1)
+    assert not [r for r in late if r.model == "b"]
+
+
 # ---------------------------------------------------------------------------
 # scheduling decisions (unit level)
 # ---------------------------------------------------------------------------

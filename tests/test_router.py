@@ -1,0 +1,346 @@
+"""Fleet tier tests: Router + Replica + CircuitBreaker + FaultPlan.
+
+Everything runs on virtual time (``ReplicaClock`` with a fixed exec
+charge, ``prefetch=False``) so every schedule, route, retry, and breaker
+transition is bit-deterministic. The property test at the bottom is the
+ISSUE's fault-path invariant: EVERY request gets exactly one terminal
+``Response`` (served / rejected / failed — never lost, never duplicated)
+across retries and breaker transitions, over seeded random fault plans.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.replica import FaultEvent, FaultPlan, Replica, \
+    ReplicaClock
+from repro.serving.router import (CircuitBreaker, HashRing, RetryPolicy,
+                                  Router)
+from repro.serving.stream import poisson_trace
+from repro.serving.types import Request, SLOConfig
+from serving_scenarios import (CHUNK, SEQ, TINY_CFG, assert_outputs_exact,
+                               build_models, combined_bytes, preload_refs,
+                               tok)
+
+EXEC = 0.05
+NAMES = ("a", "b", "c")
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(NAMES)
+
+
+def mk_fleet(models, n=3, *, budget_frac=0.5, exec_time=EXEC,
+             scheduler="fifo", **serve_kw):
+    per = int(budget_frac * combined_bytes(models))
+    fleet = []
+    for rid in range(n):
+        rep = Replica(rid, clock=ReplicaClock(exec_time=exec_time),
+                      policy="stream", chunk_bytes=CHUNK,
+                      budget_bytes=per, prefetch=False)
+        for name, m in models.items():
+            rep.register(name, m)
+        rep.start(scheduler=scheduler, **serve_kw)
+        fleet.append(rep)
+    return fleet
+
+
+def mk_trace(rate, duration, seed=3):
+    return poisson_trace({n: rate for n in NAMES}, duration,
+                         vocab=TINY_CFG.vocab, seq=SEQ, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# units: ring, breaker, retry policy, replica clock
+# ---------------------------------------------------------------------------
+
+def test_hash_ring_is_stable_and_spreads():
+    r1, r2 = HashRing([0, 1, 2]), HashRing([0, 1, 2])
+    names = [f"model-{i}" for i in range(16)]
+    homes = [r1.lookup(n) for n in names]
+    assert homes == [r2.lookup(n) for n in names]    # process-stable (md5)
+    assert set(homes) <= {0, 1, 2}
+    assert len(set(homes)) >= 2                      # not all on one node
+    # removing replica 1 only moves models homed on it (consistent hashing)
+    r3 = HashRing([0, 2])
+    moved = [n for n, h in zip(names, homes)
+             if h != 1 and r3.lookup(n) != h]
+    assert moved == []
+
+
+def test_circuit_breaker_transitions():
+    br = CircuitBreaker(0, failure_threshold=3, cooldown_s=1.0)
+    assert br.available(0.0)
+    br.on_failure(0.1)
+    br.on_success(0.15)                   # success resets the strike count
+    br.on_failure(0.2)
+    br.on_failure(0.3)
+    assert br.state == "closed" and br.available(0.4)
+    br.on_failure(0.4)                    # third CONSECUTIVE failure
+    assert br.state == "open"
+    assert not br.available(1.0)          # cooling down
+    assert br.available(1.5)              # cooldown elapsed: probe allowed
+    br.on_route(1.5)
+    assert br.state == "half_open"
+    assert not br.available(1.6)          # single probe outstanding
+    br.on_success(1.7)
+    assert br.state == "closed" and br.failures == 0
+    br.trip(2.0)                          # forced open (straggler path)
+    assert br.state == "open"
+    br.on_route(3.1)                      # probe...
+    br.on_failure(3.2)                    # ...fails: re-open, new cooldown
+    assert br.state == "open" and not br.available(3.3)
+    assert br.available(4.3)
+    assert [(a, b) for _, a, b, _ in br.transitions] == [
+        ("closed", "open"), ("open", "half_open"),
+        ("half_open", "closed"), ("closed", "open"),
+        ("open", "half_open"), ("half_open", "open")]
+
+
+def test_retry_policy_backoff_grows_caps_and_jitters_deterministically():
+    rp = RetryPolicy(base_s=0.05, factor=2.0, cap_s=0.4, jitter_frac=0.25)
+    rng = np.random.default_rng(7)
+    ds = [rp.delay(k, rng) for k in range(1, 7)]
+    for d, base in zip(ds, [0.05, 0.1, 0.2, 0.4, 0.4, 0.4]):
+        assert base <= d <= base * 1.25 + 1e-12      # jitter only inflates
+    rng2 = np.random.default_rng(7)
+    assert ds == [rp.delay(k, rng2) for k in range(1, 7)]  # seeded
+
+
+def test_replica_clock_slow_factor_inflates_exec_only():
+    clk = ReplicaClock(exec_time=0.1)
+    assert clk.tick(0.0, "m") == pytest.approx(0.1)
+    clk.slow_factor = 4.0
+    assert clk.tick(0.0, "m") == pytest.approx(0.4)  # throttled compute
+    t = clk.now()
+    clk.advance(0.2)                                 # waiting is full speed
+    assert clk.now() == pytest.approx(t + 0.2)
+
+
+def test_fault_plan_validates_and_sorts():
+    plan = FaultPlan().kill(0.5, rid=1).slow(0.2, rid=0, factor=8.0)
+    assert [(e.t_s, e.kind) for e in plan.sorted_events()] == \
+        [(0.2, "slow"), (0.5, "kill")]
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0.1, 0, "explode")
+    with pytest.raises(ValueError, match="slow factor"):
+        FaultEvent(0.1, 0, "slow", factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# routing decisions
+# ---------------------------------------------------------------------------
+
+def test_affinity_routes_each_model_to_one_home(models):
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity")
+    trace = mk_trace(rate=4.0, duration=1.5)
+    responses = router.serve(trace, slo=SLOConfig(default_slo_s=0.5))
+    assert len(responses) == len(trace)
+    assert all(r.status == "ok" for r in responses)
+    by_model = {}
+    for _, _, model, rid, why, _ in router.route_log:
+        assert why == "home"              # healthy fleet, light load
+        by_model.setdefault(model, set()).add(rid)
+    assert all(len(rids) == 1 for rids in by_model.values())
+    assert_outputs_exact(responses, preload_refs(models, trace))
+
+
+def test_round_robin_cycles_available_replicas(models):
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="round_robin")
+    trace = mk_trace(rate=4.0, duration=1.0)
+    responses = router.serve(trace)
+    assert len(responses) == len(trace)
+    rids = [rid for _, _, _, rid, why, _ in router.route_log]
+    assert all(why == "rr" for *_x, why, _ in router.route_log)
+    assert rids[:6] == [0, 1, 2, 0, 1, 2]
+
+
+def test_affinity_beats_round_robin_on_restream_bytes(models):
+    trace = mk_trace(rate=6.0, duration=2.0)
+    results = {}
+    for routing in ("affinity", "round_robin"):
+        fleet = mk_fleet(models, budget_frac=0.45)
+        router = Router(fleet, routing=routing)
+        responses = router.serve(trace)
+        assert len(responses) == len(trace)
+        results[routing] = router.report(responses)["restream_bytes"]
+    # each home keeps its model resident; round-robin cycles every model
+    # through every (too-small) pool and restreams constantly
+    assert results["affinity"] < results["round_robin"]
+
+
+def test_spillover_prefers_hot_replica_then_cold_by_free_budget(models):
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity", spill_depth=2)
+    router._ring = HashRing([r.rid for r in fleet])
+    model = "a"
+    home = router._ring.lookup(model)
+    sibs = [r.rid for r in fleet if r.rid != home]
+    # under spill_depth the home wins outright
+    rep, why = router._pick(model, 0.0, exclude=set())
+    assert (rep.rid, why) == (home, "home")
+    # back the home up past spill_depth: with a HOT sibling, spill there
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        fleet[home].inbox.push(Request(model, tok(rng), arrival_s=0.0))
+    hot_rid = sibs[0]
+    fleet[hot_rid].engine.cache.put((model, "wte", "w"),
+                                    np.zeros(8, np.uint8), 4096)
+    rep, why = router._pick(model, 0.0, exclude=set())
+    assert (rep.rid, why) == (hot_rid, "hot")
+    # nobody hot (and home excluded): cold-start by max free budget
+    fleet[hot_rid].engine.cache.remove((model, "wte", "w"))
+    fleet[sibs[1]].engine.cache.put(("filler", "w0", "w"),
+                                    np.zeros(8, np.uint8), 1 << 20)
+    rep, why = router._pick(model, 0.0, exclude={home})
+    assert (rep.rid, why) == (sibs[0], "cold")   # sibs[1] has less free
+    # home available but backlogged, nobody hot: queue behind the warm
+    # cache rather than restream cold
+    rep, why = router._pick(model, 0.0, exclude=set())
+    assert (rep.rid, why) == (home, "home_backlogged")
+
+
+def test_breaker_open_excludes_replica_from_routing(models):
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity", cooldown_s=100.0)
+    router._ring = HashRing([r.rid for r in fleet])
+    home = router._ring.lookup("a")
+    router.breakers[home].trip(0.0)
+    rep, why = router._pick("a", 1.0, exclude=set())
+    assert rep.rid != home
+
+
+# ---------------------------------------------------------------------------
+# fault injection end to end
+# ---------------------------------------------------------------------------
+
+def test_kill_one_replica_breaker_sheds_and_fleet_recovers(models):
+    trace = mk_trace(rate=6.0, duration=2.5)
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity", timeout_s=0.2,
+                    cooldown_s=0.3, failure_threshold=3)
+    victim = router.replicas[1].rid
+    responses = router.serve(trace, slo=SLOConfig(default_slo_s=1.0),
+                             fault_plan=FaultPlan().kill(0.8, rid=victim))
+    assert len(responses) == len(trace)
+    assert sorted(r.req_id for r in responses) == list(range(len(trace)))
+    br = router.breakers[victim]
+    assert br.state in ("open", "half_open")
+    assert any(to == "open" and "consecutive" in why
+               for _, _, to, why in br.transitions)
+    rep = router.report(responses)
+    assert rep["retries"] >= router.breakers[victim].failure_threshold
+    # the breaker reroutes: everything still gets SERVED (a probe's
+    # timeout notwithstanding), and the fleet keeps its SLO bounded
+    assert rep["failed"] == 0
+    assert rep["bad_rate"] <= 0.25
+    # after the breaker opened, only sparse half-open probes reach the
+    # dead replica — not the steady home traffic
+    t_open = next(t for t, _, to, _ in br.transitions if to == "open")
+    late = [e for e in router.route_log
+            if e[3] == victim and e[0] > t_open]
+    early = [e for e in router.route_log
+             if e[3] == victim and e[0] <= t_open]
+    assert len(late) <= max(2, len(early) // 2)
+
+
+def test_wedge_then_recover_reuses_replica_after_probe(models):
+    trace = mk_trace(rate=6.0, duration=3.0)
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity", timeout_s=0.2,
+                    cooldown_s=0.25, failure_threshold=2)
+    victim = HashRing([0, 1, 2]).lookup("a")    # a rid with home traffic
+    plan = FaultPlan().wedge(0.6, rid=victim).recover(1.4, rid=victim)
+    responses = router.serve(trace, slo=SLOConfig(default_slo_s=1.0),
+                             fault_plan=plan)
+    assert len(responses) == len(trace)
+    br = router.breakers[victim]
+    pairs = [(a, b) for _, a, b, _ in br.transitions]
+    assert ("closed", "open") in pairs          # wedge tripped it
+    assert ("half_open", "closed") in pairs     # probe re-closed it
+    assert br.state == "closed"
+    # traffic returned to the recovered replica
+    t_close = next(t for t, _, to, _ in br.transitions if to == "closed")
+    assert any(e[3] == victim and e[0] > t_close
+               for e in router.route_log)
+    assert router.report(responses)["failed"] == 0
+
+
+def test_slow_replica_tripped_by_straggler_detector(models):
+    trace = mk_trace(rate=5.0, duration=3.0)
+    fleet = mk_fleet(models)
+    # generous timeout: the replica is alive-but-slow, so the breaker can
+    # only open through the health check's straggler feed
+    router = Router(fleet, routing="round_robin", timeout_s=5.0,
+                    health_interval_s=0.5, cooldown_s=10.0)
+    responses = router.serve(
+        trace, slo=SLOConfig(default_slo_s=2.0),
+        fault_plan=FaultPlan().slow(0.3, rid=2, factor=8.0))
+    assert len(responses) == len(trace)
+    assert any(ev == "straggler_trip" and rid == 2
+               for _, ev, rid in router.health_log)
+    assert any(why == "straggler"
+               for *_x, why in router.breakers[2].transitions)
+    # siblings were never tripped
+    assert router.breakers[0].state == "closed"
+    assert router.breakers[1].state == "closed"
+
+
+def test_fleet_is_deterministic_under_faults(models):
+    trace = mk_trace(rate=6.0, duration=2.0)
+
+    def run():
+        fleet = mk_fleet(models)
+        router = Router(fleet, routing="affinity", timeout_s=0.2, seed=5)
+        responses = router.serve(
+            trace, slo=SLOConfig(default_slo_s=1.0),
+            fault_plan=FaultPlan().kill(0.7, rid=0))
+        return ([(r.req_id, r.status, round(r.latency_s, 9))
+                 for r in responses], router.route_log)
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE property: exactly one terminal response per request,
+# across retries + breaker transitions, over random fault plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_every_request_gets_exactly_one_terminal_response(models, seed):
+    rng = np.random.default_rng(seed)
+    trace = mk_trace(rate=float(rng.uniform(3.0, 8.0)),
+                     duration=1.5, seed=100 + seed)
+    plan = FaultPlan()
+    for rid in range(3):
+        if rng.random() < 0.6:
+            t = float(rng.uniform(0.1, 1.2))
+            kind = rng.choice(["kill", "wedge", "slow"])
+            if kind == "kill":
+                plan.kill(t, rid=rid)
+            elif kind == "wedge":
+                plan.wedge(t, rid=rid)
+                if rng.random() < 0.7:
+                    plan.recover(t + float(rng.uniform(0.2, 0.8)), rid=rid)
+            else:
+                plan.slow(t, rid=rid, factor=float(rng.uniform(3, 10)))
+    fleet = mk_fleet(models)
+    router = Router(fleet, routing="affinity", timeout_s=0.2,
+                    cooldown_s=0.25, seed=seed)
+    responses = router.serve(trace, slo=SLOConfig(default_slo_s=0.8),
+                             fault_plan=plan)
+    # exactly one terminal response per request: none lost, none
+    # duplicated, even when an attempt's original replica also completed
+    # it after the retry won (those are counted, not returned)
+    assert sorted(r.req_id for r in responses) == list(range(len(trace)))
+    assert all(r.status in ("ok", "rejected", "failed")
+               for r in responses)
+    assert all(math.isfinite(r.latency_s) and r.latency_s >= 0.0
+               for r in responses)
+    # arrival order, original timeline
+    arrivals = [r.arrival_s for r in responses]
+    assert arrivals == sorted(arrivals)
+    assert_outputs_exact(responses, preload_refs(models, trace))

@@ -8,7 +8,7 @@ from dataclasses import replace
 
 from repro.configs.gptneo import GPTNEO_S
 from repro.core import (HostModel, OPGProblem, OverlapPlan, PreloadExecutor,
-                        StreamingExecutor, build_lm_graph, capacities, solve)
+                        StreamingExecutor, capacities, solve)
 from repro.core.capacity import HWSpec
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.weight_cache import WeightCache

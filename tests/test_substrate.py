@@ -176,6 +176,60 @@ def test_straggler_detector_ignores_transient():
     assert flagged == []
 
 
+def test_straggler_detector_needs_three_reporting_hosts():
+    """<3 hosts reporting -> no flags (median/MAD is meaningless), even
+    for a host that was striking while the fleet was larger."""
+    det = StragglerDetector(z_thresh=3.0, patience=1)
+    assert det.check() == []                      # empty fleet
+    det.record(0, 0.1)
+    det.record(1, 0.5)
+    assert det.check() == []                      # two hosts: early return
+    for h in range(4):
+        det.record(h, 0.1 if h != 2 else 0.5)
+    assert det.check() == [2]
+    # fleet shrinks below 3: the early return kicks back in
+    det.record(0, 0.1)
+    det.record(2, 0.5)
+    assert det.check() == []
+
+
+def test_straggler_detector_prunes_departed_hosts():
+    """A host that stops reporting is pruned — when it returns it starts
+    from a clean slate instead of re-flagging off stale strikes."""
+    det = StragglerDetector(z_thresh=3.0, patience=2)
+    for _ in range(3):                            # host 2 earns its strikes
+        for h in range(4):
+            det.record(h, 0.1 if h != 2 else 0.5)
+        det.check()
+    assert det.strikes[2] >= det.patience
+    for _ in range(2):                            # host 2 departs
+        for h in (0, 1, 3):
+            det.record(h, 0.1)
+        assert det.check() == []
+    assert 2 not in det.strikes and 2 not in det.times
+    # host 2 returns healthy: one fast sample must not flag it
+    for h in range(4):
+        det.record(h, 0.1)
+    assert det.check() == []
+
+
+def test_elastic_controller_contract_returns_restore_step():
+    """restore_fn(env) -> (state, restore_step): the second element is the
+    committed step the restore landed on, recorded in the ElasticEvent and
+    returned to the launcher (the documented contract)."""
+    def restore_fn(env):
+        return {"params": "restored"}, 17
+
+    ec = ElasticController(lambda n: f"env({n})", restore_fn, min_hosts=1)
+    env, state, restore_step = ec.on_membership_change(
+        step=99, old_hosts=3, new_hosts=2)
+    assert (env, state, restore_step) == ("env(2)", {"params": "restored"},
+                                          17)
+    ev = ec.events[0]
+    assert (ev.step, ev.old_hosts, ev.new_hosts, ev.restore_step) \
+        == (99, 3, 2, 17)
+
+
 def test_preemption_handler():
     p = PreemptionHandler()
     assert not p.should_stop()
