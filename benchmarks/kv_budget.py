@@ -1,0 +1,262 @@
+"""Unified memory budget A/B: weights-only split vs weights+KV+arena.
+
+Two cells:
+
+  * ``admission`` — analytic, on one LLM config (llama3-405b, reduced
+    dims so the plan solver runs on CPU; the REAL config's per-sequence
+    KV arithmetic is reported alongside for scale). At each target batch
+    size B the weights-only ``allocate_joint`` spends the whole budget on
+    weight residency, leaving only its unparked remainder as KV headroom;
+    the unified pass (``reserves=ReservationSpec(...)``) prices B
+    concurrent sequences' paged KV directly against marginal weight
+    latency in the same water-fill. The cell ASSERTS the unified
+    allocator admits strictly more concurrent sequences than the
+    weights-only split's leftover headroom at every real batch size —
+    the PR's acceptance criterion.
+  * ``serving`` — executed on a SimClock trace (reduced GPT-Neo pool,
+    measured charges): the same decode-heavy trace served weights-only
+    (KV invisible, the pre-PR fiction) vs unified (prompt+decode KV
+    charged per segment, arenas reserved per batch). Outputs in both
+    runs are asserted bit-for-bit equal to solo preload references —
+    budget accounting must never change what is computed — and both
+    pools must end ledger-balanced.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only kv_budget``
+Standalone JSON (the CI perf-trajectory artifact):
+``PYTHONPATH=src python -m benchmarks.kv_budget --smoke --out
+BENCH_kv_budget.json``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_arch
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.allocator import (MixSpec, ReservationSpec, allocate_joint)
+from repro.core.arena import arena_size
+from repro.core.capacity import HWSpec
+from repro.core.graph import build_lm_graph
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.clock import SimClock
+from repro.serving.engine import ServingEngine
+from repro.serving.stream import RequestStream, poisson_trace
+from repro.serving.weight_cache import KVSpec
+
+SEQ = 32
+CHUNK = 32 << 10
+DISK_BW = 1e8                  # simulated storage stage (bytes/s)
+BUDGET_FRAC = 0.7              # of combined weights: real pool contention
+BATCH_SIZES = (1, 4, 8, 16)    # concurrent-sequence targets (real serving)
+KV_SEQ_TOKENS = 512            # planned context length per sequence
+# analytic cell runs on a fixed CPU-class spec so the artifact is
+# machine-independent (same convention as tests/test_plan.py)
+ANALYTIC_HW = HWSpec(peak_flops=5e10, hbm_bw=2e10, stream_bw=1e10)
+
+
+def _kv_token_bytes(cfg, dtype_bytes: int = 4) -> int:
+    """KV bytes one decoded token appends: K and V per attention layer,
+    GQA-aware. ``attn_every`` > 1 (hybrids) thins the attention stack."""
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    return 2 * n_attn * cfg.n_kv_heads * cfg.resolved_head_dim * dtype_bytes
+
+
+def admission_cell() -> dict:
+    """Weights-only vs unified allocator on one LLM config."""
+    arch = get_arch("llama3-405b").model
+    cfg = arch.reduced()
+    g = build_lm_graph(cfg, seq=KV_SEQ_TOKENS, batch=1, dtype_bytes=4)
+    graphs = {"llm": g}
+    mix = MixSpec.uniform(graphs)
+    per_tok = _kv_token_bytes(cfg)
+    page = 16 << 10
+    seq_raw = per_tok * KV_SEQ_TOKENS
+    seq_bytes = -(-seq_raw // page) * page
+    arena = arena_size(g)
+    # budget: weights plus room for a handful of sequences — the regime
+    # where the weights/KV trade is real (too small: nothing fits; too
+    # large: both variants admit everything)
+    budget = int(g.total_weight_bytes + arena
+                 + seq_bytes * max(BATCH_SIZES) * 0.6)
+    cell = {
+        "config": arch.name,
+        "per_token_kv_bytes_real": _kv_token_bytes(arch, dtype_bytes=2),
+        "per_seq_kv_mb_real_8k": round(
+            _kv_token_bytes(arch, dtype_bytes=2) * 8192 / 2**20, 1),
+        "per_token_kv_bytes": per_tok,
+        "kv_seq_bytes": seq_bytes,
+        "arena_bytes": arena,
+        "budget_bytes": budget,
+        "batches": {},
+    }
+    for b in BATCH_SIZES:
+        wo = allocate_joint(graphs, CHUNK, budget, mix, hw=ANALYTIC_HW)
+        # the weights-only split is blind to KV: sequences squeeze into
+        # whatever the fill left unspent (it parks spare on the model
+        # whenever that does not hurt latency, so usually ~nothing)
+        leftover = budget - sum(wo.split.values())
+        admitted_wo = max(0, leftover) // seq_bytes
+        uni = allocate_joint(
+            graphs, CHUNK, budget, mix, hw=ANALYTIC_HW,
+            reserves={"llm": ReservationSpec(
+                arena_bytes=arena, kv_seq_bytes=seq_bytes,
+                kv_target_seqs=b,
+                kv_benefit_s=seq_bytes / ANALYTIC_HW.stream_bw)})
+        admitted_uni = uni.kv_seqs["llm"]
+        assert admitted_uni > admitted_wo, (
+            f"unified must admit strictly more sequences at B={b}: "
+            f"unified={admitted_uni} weights_only={admitted_wo}")
+        cell["batches"][str(b)] = {
+            "weights_only_seqs": int(admitted_wo),
+            "unified_seqs": int(admitted_uni),
+            "unified_weight_mb": round(sum(uni.split.values()) / 2**20, 3),
+            "unified_kv_mb": round(sum(uni.kv_split.values()) / 2**20, 3),
+        }
+    cell["unified_admits_more"] = True    # every assert above passed
+    return cell
+
+
+def _models():
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    return {
+        "big": HostModel.build(replace(base, name="big", num_layers=4),
+                               seq=SEQ, seed=0),
+        "small": HostModel.build(replace(base, name="small", num_layers=2),
+                                 seq=SEQ, seed=1),
+    }
+
+
+def _serve(models, trace, budget, *, kv=None, arena=False):
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK,
+                        budget_bytes=budget, disk_bw=DISK_BW,
+                        kv=kv, arena=arena, kv_target_seqs=4,
+                        kv_seq_tokens=SEQ)
+    for n, m in models.items():
+        eng.register(n, m)
+    responses = eng.serve(RequestStream.from_trace(list(trace)),
+                          clock=SimClock())
+    return eng, responses
+
+
+def _metrics(eng, responses):
+    served = [r for r in responses if r.status == "ok"]
+    lats = np.array([r.latency_s for r in served]) \
+        if served else np.array([float("nan")])
+    grown = sum(b for *_e, ev, b in eng.kv_log if ev == "grow")
+    rejects = sum(1 for *_e, ev, _b in eng.kv_log
+                  if ev.endswith("rejected"))
+    return {
+        "requests": len(responses),
+        "served": len(served),
+        "mean_s": float(np.mean(lats)),
+        "p95_s": float(np.percentile(lats, 95)),
+        "pool_hit_rate": eng.cache_hit_rate(),
+        "kv_grown_mb": round(grown / 2**20, 3),
+        "kv_rejects": rejects,
+        "kv_peak_mb": round(max((r.kv_bytes for r in served), default=0)
+                            / 2**20, 3),
+        "ledger_balanced": eng.cache.ledger_balanced(),
+    }
+
+
+def _check_exact(models, trace, *runs):
+    """Every served response in every run equals its solo preload ref."""
+    ref_ex = {n: PreloadExecutor(m) for n, m in models.items()}
+    refs = {(r.model, r.arrival_s):
+            np.asarray(ref_ex[r.model].run(r.tokens).result) for r in trace}
+    for responses in runs:
+        for r in responses:
+            if r.status != "ok":
+                continue
+            assert np.array_equal(np.asarray(r.result),
+                                  refs[(r.model, r.arrival_s)]), \
+                f"output diverged for {r.model}@{r.arrival_s}"
+
+
+def serving_cell(duration_s: float, check_exact: bool = True) -> dict:
+    models = _models()
+    combined = sum(sum(a.nbytes for a in m.host_weights.values())
+                   for m in models.values())
+    budget = int(BUDGET_FRAC * combined)
+    rng = np.random.default_rng(0)
+    for m in models.values():   # warm jitted kernels before measuring
+        PreloadExecutor(m).run(rng.integers(0, m.cfg.vocab, (1, SEQ),
+                                            dtype=np.int32))
+    vocab = min(m.cfg.vocab for m in models.values())
+    trace = poisson_trace({n: 8.0 for n in models}, duration_s,
+                          vocab=vocab, seq=SEQ, seed=7)
+    for r in trace:             # decode-heavy: KV doubles over execution
+        r.decode_tokens = SEQ
+    eng_w, res_w = _serve(models, trace, budget)
+    eng_u, res_u = _serve(models, trace, budget,
+                          kv=KVSpec(page_bytes=4 << 10), arena=True)
+    if check_exact:
+        _check_exact(models, trace, res_w, res_u)
+    cell = {"weights_only": _metrics(eng_w, res_w),
+            "unified": _metrics(eng_u, res_u),
+            "budget_bytes": budget}
+    assert cell["weights_only"]["ledger_balanced"]
+    assert cell["unified"]["ledger_balanced"]
+    # weights-only serving never touches the KV machinery
+    assert cell["weights_only"]["kv_grown_mb"] == 0
+    assert cell["unified"]["kv_grown_mb"] > 0
+    return cell
+
+
+def sweep(duration_s: float = 1.0, check_exact: bool = True) -> dict:
+    return {
+        "bench": "kv_budget",
+        "duration_s": duration_s,
+        "cells": {
+            "admission": admission_cell(),
+            "serving": serving_cell(duration_s, check_exact=check_exact),
+        },
+    }
+
+
+def run():
+    result = sweep()
+    rows = []
+    adm = result["cells"]["admission"]
+    for b, m in adm["batches"].items():
+        rows.append(Row(
+            f"kv_budget/admission/B{b}", 0.0,
+            f"weights_only_seqs={m['weights_only_seqs']} "
+            f"unified_seqs={m['unified_seqs']} "
+            f"kv_mb={m['unified_kv_mb']}"))
+    srv = result["cells"]["serving"]
+    for variant in ("weights_only", "unified"):
+        m = srv[variant]
+        rows.append(Row(
+            f"kv_budget/serving/{variant}", m["mean_s"] * 1e6,
+            f"served={m['served']}/{m['requests']} "
+            f"mean={m['mean_s']:.4f}s p95={m['p95_s']:.4f}s "
+            f"kv_grown_mb={m['kv_grown_mb']} rejects={m['kv_rejects']} "
+            f"ledger={m['ledger_balanced']}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tag the result as the CI smoke artifact")
+    ap.add_argument("--out", default="",
+                    help="write the sweep dict as JSON (BENCH_*.json)")
+    args = ap.parse_args(argv)
+    result = sweep(duration_s=1.0)
+    result["smoke"] = bool(args.smoke)
+    payload = json.dumps(result, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload + "\n")
+    print(payload)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ Mapping to the paper (DESIGN.md §7):
     §4.4 prio   -> priority_overload (weighted EDF × batch cap under overload)
     §4.4 mix    -> mix_shift (joint vs uniform budget split; re-planning)
     §4.4 fleet  -> replica_fleet (affinity vs round-robin; breaker A/B)
+    §4.4 kv     -> kv_budget (weights-only vs unified weights+KV+arena pool)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
 """
@@ -32,6 +33,7 @@ SUITES = [
     "priority_overload",
     "mix_shift",
     "replica_fleet",
+    "kv_budget",
     "ablation",
     "tradeoff",
     "naive_overlap",

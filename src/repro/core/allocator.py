@@ -99,6 +99,41 @@ class MixSpec:
                          for n in set(a) | set(b))
 
 
+@dataclass(frozen=True)
+class ReservationSpec:
+    """Per-model NON-WEIGHT memory demand for the unified budget pool.
+
+    ``arena_bytes`` is the model's profile-guided activation-arena peak
+    (``core.arena.arena_size``): hard — a batch cannot execute without
+    its scratch, so the bytes are subtracted from the budget before any
+    weight/KV trading (an infeasible total raises
+    ``BudgetInfeasibleError`` exactly like weight floors do).
+
+    KV demand is elastic: each admitted concurrent sequence pins
+    ``kv_seq_bytes`` of paged KV (pages × page size at the planned
+    context length), admitting one more is worth ``kv_benefit_s`` of
+    latency (the restream-equivalent cost — recompute or reload — that a
+    rejected/preempted sequence would pay to come back), and demand
+    saturates at ``kv_target_seqs`` concurrent sequences. The water-fill
+    prices a KV sequence-quantum at ``kv_benefit_s / kv_seq_bytes``
+    gain-per-byte, directly against the weight quanta's marginal
+    latency-per-byte — one currency, one pass."""
+    arena_bytes: int = 0
+    kv_seq_bytes: int = 0
+    kv_target_seqs: int = 0
+    kv_benefit_s: float = 0.0
+
+    def __post_init__(self):
+        if self.arena_bytes < 0 or self.kv_seq_bytes < 0 \
+                or self.kv_target_seqs < 0 or self.kv_benefit_s < 0:
+            raise ValueError(f"ReservationSpec fields must be >= 0: {self}")
+
+    @property
+    def reserved_floor(self) -> int:
+        """Hard bytes this model removes from the weight/KV pool."""
+        return int(self.arena_bytes)
+
+
 @dataclass
 class AllocationResult:
     """One solved split: per-model byte caps plus search provenance.
@@ -106,7 +141,13 @@ class AllocationResult:
     ``plans``/``peaks`` are the evaluator's already-solved artifacts at
     the chosen caps — ``plan_multi_model`` installs them directly instead
     of re-running the solver at the same caps (planning latency directly
-    delays the serving engine's online re-plan swap)."""
+    delays the serving engine's online re-plan swap).
+
+    With reservations (``allocate_joint(reserves=...)``) the unified pass
+    also reports where the non-weight bytes went: ``kv_seqs`` /
+    ``kv_split`` are the concurrent sequences (and their bytes) the split
+    funds per model, ``arena`` the hard arena floors taken off the top —
+    ``split + kv_split + arena`` never exceeds the budget."""
     split: Dict[str, int]                 # model -> planning cap (bytes)
     cost: float                           # mix-weighted mean latency (s)
     mode: str                             # "waterfill" | "brute"
@@ -115,6 +156,9 @@ class AllocationResult:
     mix: Dict[str, float] = field(default_factory=dict)
     plans: Dict[str, object] = field(default_factory=dict)
     peaks: Dict[str, int] = field(default_factory=dict)
+    kv_seqs: Dict[str, int] = field(default_factory=dict)
+    kv_split: Dict[str, int] = field(default_factory=dict)
+    arena: Dict[str, int] = field(default_factory=dict)
 
 
 def model_floor(graph, chunk_bytes: int) -> int:
@@ -206,7 +250,8 @@ def enumerate_splits(names: List[str], floors: Dict[str, int],
 def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
                    mix: MixSpec, hw=None, solver_cfg=None,
                    quantum: Optional[int] = None, mode: str = "auto",
-                   evaluator: Optional[PlanCostEvaluator] = None
+                   evaluator: Optional[PlanCostEvaluator] = None,
+                   reserves: Optional[Dict[str, ReservationSpec]] = None
                    ) -> AllocationResult:
     """Search the per-model budget split jointly under the request mix.
 
@@ -219,7 +264,17 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
     ``quantum`` is the allocation granularity (default: spare budget in
     ~16 steps, chunk-aligned). ``mode="auto"`` brute-forces when the grid
     is small enough to enumerate exactly, else water-fills.
-    """
+
+    ``reserves`` (``{model: ReservationSpec}``) turns on the UNIFIED pass:
+    arena bytes come off the top as hard per-model floors, and paged-KV
+    demand competes with weight quanta inside one water-fill — each step
+    hands the next bytes to whichever candidate (a weight quantum's
+    mix-weighted marginal latency, or one more concurrent sequence's
+    ``kv_benefit_s``) buys the most gain per byte. Without ``reserves``
+    the weights-only search below runs untouched, bit-for-bit. Reserved
+    mode is water-fill only (``mode="brute"`` raises: enumerating the
+    joint weight x KV grid explodes and the brute oracle prices weights
+    only)."""
     if mode not in ALLOC_MODES:
         raise ValueError(f"unknown allocation mode {mode!r}; "
                          f"expected one of {ALLOC_MODES}")
@@ -231,6 +286,14 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
             f"mix weights {sorted(mix.as_dict())} put zero total weight on "
             f"the models being planned {sorted(names)} — check the names")
     budget_bytes = int(budget_bytes)
+    if reserves:
+        if mode == "brute":
+            raise ValueError("allocate_joint: mode='brute' does not price "
+                             "KV/arena reservations — use 'waterfill' or "
+                             "'auto' with reserves")
+        return _allocate_reserved(graphs, chunk_bytes, budget_bytes, mix,
+                                  hw, solver_cfg, quantum, evaluator,
+                                  reserves)
     floors = {n: min(model_floor(graphs[n], chunk_bytes), budget_bytes)
               for n in names}
     spare = budget_bytes - sum(floors.values())
@@ -310,6 +373,111 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
         mix=mix.as_dict(),
         plans={n: pl for n, (_lat, _pk, pl) in final.items()},
         peaks={n: pk for n, (_lat, pk, _pl) in final.items()})
+
+
+def _allocate_reserved(graphs, chunk_bytes: int, budget_bytes: int,
+                       mix: MixSpec, hw, solver_cfg,
+                       quantum: Optional[int],
+                       evaluator: Optional[PlanCostEvaluator],
+                       reserves: Dict[str, ReservationSpec]
+                       ) -> AllocationResult:
+    """The unified water-fill: weights vs KV vs activations in one pass.
+
+    Arena bytes are hard floors taken off the top. The remaining spare is
+    handed out one candidate at a time, each priced in GAIN PER BYTE:
+
+      * a weight quantum for model n buys
+        ``w_n * (lat(cap) - lat(cap + q)) / q`` — the mix-weighted
+        marginal latency of the analytic plan at that cap, exactly the
+        weights-only currency;
+      * one more concurrent KV sequence for model n buys
+        ``w_n * kv_benefit_s / kv_seq_bytes`` — the restream-equivalent
+        seconds a shed/preempted sequence would pay, flat until demand
+        saturates at ``kv_target_seqs``.
+
+    The mix-weighted objective the result's ``cost`` reports adds an
+    unserved-KV penalty (``w * kv_benefit_s`` per sequence short of
+    target) to the usual weighted latency, so splits remain comparable
+    across KV allocations."""
+    names = list(graphs)
+    zero = ReservationSpec()
+    arena = {n: int(reserves.get(n, zero).arena_bytes) for n in names}
+    arena_total = sum(arena.values())
+    weight_budget = budget_bytes - arena_total
+    floors = {n: min(model_floor(graphs[n], chunk_bytes),
+                     max(weight_budget, 1)) for n in names}
+    spare = weight_budget - sum(floors.values())
+    if spare < 0:
+        raise BudgetInfeasibleError(
+            f"budget {budget_bytes} cannot cover the per-model weight "
+            f"floors {floors} plus activation-arena reservations "
+            f"{arena} (arenas {arena_total}): raise the budget, shrink "
+            f"the profiled batch, or serve fewer models")
+    if quantum is None:
+        chunk = int(chunk_bytes)
+        quantum = max(chunk, (spare // 16 // chunk) * chunk or chunk)
+    quantum = max(1, int(quantum))
+    ev = evaluator or PlanCostEvaluator(graphs, chunk_bytes, hw=hw,
+                                        solver_cfg=solver_cfg)
+    split = dict(floors)
+    kv_seqs = {n: 0 for n in names}
+    avail = spare
+    while True:
+        cands = []
+        for n in names:
+            w = mix.weight(n)
+            if w <= 0:
+                continue
+            if avail >= quantum:
+                g = w * (ev.latency(n, split[n])
+                         - ev.latency(n, split[n] + quantum)) / quantum
+                cands.append((g, 0, w, n, quantum, "w"))
+            rs = reserves.get(n)
+            if (rs is not None and rs.kv_seq_bytes > 0
+                    and kv_seqs[n] < rs.kv_target_seqs
+                    and avail >= rs.kv_seq_bytes):
+                g = w * rs.kv_benefit_s / rs.kv_seq_bytes
+                # tie-flag 1: at equal gain-per-byte prefer the KV
+                # sequence — it serves admission directly, while a weight
+                # quantum at zero marginal latency buys nothing the
+                # simulator can see
+                cands.append((g, 1, w, n, rs.kv_seq_bytes, "kv"))
+        if not cands:
+            break
+        g, _kv, _w, n, nbytes, kind = max(
+            cands, key=lambda c: (c[0], c[1], c[2], c[3]))
+        if g <= 0:
+            # no candidate improves anything: try parking the remaining
+            # spare on the heaviest model (same guarded move as the
+            # weights-only fill — latency is not monotone in the cap)
+            heavy = max(names, key=lambda n2: (mix.weight(n2), n2))
+            parked = dict(split)
+            parked[heavy] += (avail // quantum) * quantum
+            if split_cost(ev, mix, parked) <= split_cost(ev, mix, split):
+                split = parked
+            break
+        if kind == "w":
+            split[n] += nbytes
+        else:
+            kv_seqs[n] += 1
+        avail -= nbytes
+    kv_penalty = sum(
+        mix.weight(n) * rs.kv_benefit_s
+        * max(0, rs.kv_target_seqs - kv_seqs[n])
+        for n, rs in reserves.items()
+        if n in graphs and rs.kv_seq_bytes > 0)
+    cost = split_cost(ev, mix, split) + kv_penalty
+    final = {n: ev.evaluate(n, split[n]) for n in names}
+    return AllocationResult(
+        split=split, cost=cost, mode="waterfill", evals=ev.evals,
+        per_model_latency={n: lat for n, (lat, _pk, _pl) in final.items()},
+        mix=mix.as_dict(),
+        plans={n: pl for n, (_lat, _pk, pl) in final.items()},
+        peaks={n: pk for n, (_lat, pk, _pl) in final.items()},
+        kv_seqs=kv_seqs,
+        kv_split={n: kv_seqs[n] * reserves.get(n, zero).kv_seq_bytes
+                  for n in names},
+        arena=arena)
 
 
 # ---------------------------------------------------------------------------

@@ -253,14 +253,19 @@ class MultiModelPlan:
         executes, without the pair exceeding the global cap. ``reserve``
         holds back a fraction of the cap (the engine uses 10%: per-model
         peaks are plan-time estimates and pinning right up to the budget
-        starves the executor into pool-rejected transients). The result
-        is clamped at 0; ``reserve`` outside [0, 1] is a caller bug and
-        raises (a reserve > 1 silently produced negative budgets)."""
+        starves the executor into pool-rejected transients). Bytes the
+        plan RESERVED for non-weight kinds (activation arenas + funded KV
+        sequences, ``meta["reserved_bytes"]``) are excluded up front —
+        prefetched weights must never crowd out the scratch and context
+        the unified allocator promised. The result is clamped at 0;
+        ``reserve`` outside [0, 1] is a caller bug and raises (a
+        reserve > 1 silently produced negative budgets)."""
         if not (isinstance(reserve, (int, float)) and math.isfinite(reserve)
                 and 0.0 <= reserve <= 1.0):
             raise ValueError(f"reserve must be a finite fraction in [0, 1], "
                              f"got {reserve!r}")
-        return max(0, int((1.0 - reserve) * self.budget_bytes)
+        reserved = int(self.meta.get("reserved_bytes", 0))
+        return max(0, int((1.0 - reserve) * (self.budget_bytes - reserved))
                    - self.peaks.get(current, 0))
 
     def prefetch_schedule(self, name: str, weight_bytes: Dict[str, int],
@@ -372,7 +377,8 @@ def _plan_one(g: ModelGraph, chunk_bytes: int, cap_bytes: int,
 def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
                      budget_bytes: int, hw: Optional[HWSpec] = None,
                      solver_cfg=None, max_rounds: int = 4,
-                     mix=None, alloc_mode: str = "auto") -> MultiModelPlan:
+                     mix=None, alloc_mode: str = "auto",
+                     reserves=None) -> MultiModelPlan:
     """Solve one OverlapPlan per model such that every model's execution
     peak (preload + streamed residency) fits the shared device budget.
 
@@ -384,11 +390,23 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
     of the analytic per-model latencies is minimized — hot models keep
     resident bytes, cold models stream — and the split/mix/search
     provenance is recorded in ``meta``. ``alloc_mode`` is forwarded to
-    ``allocate_joint`` ("auto" | "waterfill" | "brute")."""
+    ``allocate_joint`` ("auto" | "waterfill" | "brute").
+
+    ``reserves`` (``{model: core.allocator.ReservationSpec}``) switches
+    the allocator to the unified weights-vs-KV-vs-activations pass: arena
+    bytes become hard floors, funded KV sequences share the spare with
+    weight quanta, and ``meta`` gains ``kv_seqs`` / ``kv_split`` /
+    ``arena`` / ``reserved_bytes`` (the total the engine must keep clear
+    of weight prefetch — see ``prefetch_budget``). Reserves imply a mix
+    (uniform when none is given: the unified pass needs weights)."""
     hw = hw or HWSpec()
     mm = MultiModelPlan(budget_bytes=int(budget_bytes),
                         meta={"chunk_bytes": chunk_bytes})
     caps_of = {n: int(budget_bytes) for n in graphs}
+    reserved_of = {n: 0 for n in graphs}
+    if reserves and mix is None:
+        from repro.core.allocator import MixSpec
+        mix = MixSpec.uniform(graphs)
     if mix is not None:
         from repro.core.allocator import (BudgetInfeasibleError, MixSpec,
                                           allocate_joint)
@@ -397,7 +415,7 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
         try:
             alloc = allocate_joint(graphs, chunk_bytes, budget_bytes, mix,
                                    hw=hw, solver_cfg=solver_cfg,
-                                   mode=alloc_mode)
+                                   mode=alloc_mode, reserves=reserves)
         except BudgetInfeasibleError as e:
             # no partition exists (per-model floors exceed the budget):
             # fall back to the uniform full-budget caps — serialized
@@ -410,6 +428,14 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
                             "alloc_mode": alloc.mode,
                             "alloc_cost_s": alloc.cost,
                             "alloc_evals": alloc.evals})
+            if reserves:
+                reserved_of = {n: alloc.arena.get(n, 0)
+                               + alloc.kv_split.get(n, 0) for n in graphs}
+                mm.meta.update({
+                    "kv_seqs": dict(alloc.kv_seqs),
+                    "kv_split": dict(alloc.kv_split),
+                    "arena": dict(alloc.arena),
+                    "reserved_bytes": int(sum(reserved_of.values()))})
             prebuilt = (alloc.peaks, alloc.plans)
     for name, g in graphs.items():
         if mix is not None and "split" in mm.meta and name in prebuilt[1]:

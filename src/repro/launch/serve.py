@@ -128,6 +128,31 @@ def main(argv=None):
     ap.add_argument("--replan-drift", type=float, default=0.3,
                     help="total-variation drift threshold that triggers "
                     "an online re-plan (with --replan)")
+    ap.add_argument("--kv-page-kb", type=int, default=0,
+                    help="unified budget: paged-KV page size (KB); > 0 "
+                    "adds every active sequence's KV cache to the shared "
+                    "pool (prompt prefill + per-decode-step growth, pages "
+                    "pinned while the sequence runs). 0 = weights-only")
+    ap.add_argument("--kv-restore", choices=["reload", "recompute"],
+                    default="reload",
+                    help="unified budget: cost of bringing an evicted KV "
+                    "page back — reload its bytes from storage, or "
+                    "recompute the attention prefix (priced at page_bytes "
+                    "* --kv-recompute-factor restream-equivalents)")
+    ap.add_argument("--kv-recompute-factor", type=float, default=1.5,
+                    help="unified budget: recompute cost multiplier for "
+                    "--kv-restore recompute")
+    ap.add_argument("--kv-target-seqs", type=int, default=4,
+                    help="unified budget: concurrent sequences per model "
+                    "the joint allocator funds KV reservations for")
+    ap.add_argument("--decode-tokens", type=int, default=0,
+                    help="unified budget: planned decode length stamped "
+                    "on every trace request (KV grows by this many tokens "
+                    "over the request's execution)")
+    ap.add_argument("--arena", action="store_true",
+                    help="unified budget: reserve each model's profile-"
+                    "guided activation-arena peak (core.arena) in the "
+                    "shared pool for the duration of a batch")
     ap.add_argument("--replicas", type=int, default=1,
                     help="online: serve through a fleet of N replicas "
                     "behind the cache-affinity Router (each replica gets "
@@ -154,10 +179,18 @@ def main(argv=None):
             ap.error("--mix needs one weight per --models entry "
                      f"({len(names)}), got {len(weights)}")
         mix = {f"{n}#{i}": w for i, (n, w) in enumerate(zip(names, weights))}
+    kv_spec = None
+    if args.kv_page_kb > 0:
+        from repro.serving.weight_cache import KVSpec
+        kv_spec = KVSpec(page_bytes=args.kv_page_kb << 10,
+                         restore=args.kv_restore,
+                         recompute_factor=args.kv_recompute_factor)
     engine_kw = dict(policy=args.policy, m_peak=args.m_peak_mb << 20,
                      disk_bw=args.disk_gbps * 1e9,
                      budget_bytes=(args.budget_mb << 20) or None,
-                     eviction=args.eviction, mix=mix)
+                     eviction=args.eviction, mix=mix,
+                     kv=kv_spec, kv_target_seqs=args.kv_target_seqs,
+                     arena=args.arena)
     rng = np.random.default_rng(0)
     models = {}
     for i, n in enumerate(names):
@@ -185,6 +218,9 @@ def main(argv=None):
             rates = {n: args.rate for n in models}
         trace = poisson_trace(rates, args.duration, vocab=vocab,
                               seq=args.seq, seed=0)
+        if args.decode_tokens > 0:
+            for r in trace:
+                r.decode_tokens = args.decode_tokens
         if args.priority_mix:
             pmix = {}
             for pair in args.priority_mix.split(","):
@@ -292,6 +328,15 @@ def main(argv=None):
             swaps = sum(1 for e in engine.replan_log
                         if e["event"] == "swap")
             line += f" replans={swaps}"
+        if engine.unified:
+            grown = sum(b for *_e, ev, b in engine.kv_log if ev == "grow")
+            rej = sum(1 for *_e, ev, _b in engine.kv_log
+                      if ev.endswith("rejected"))
+            line += (f" kv_grown_mb={grown / 1e6:.1f} "
+                     f"kv_rejects={rej} reserved_mb="
+                     f"{engine.multi_plan.meta.get('reserved_bytes', 0) / 1e6:.1f}"
+                     if engine.multi_plan is not None else
+                     f" kv_grown_mb={grown / 1e6:.1f} kv_rejects={rej}")
         print(line)
         for d in detail:
             print(d)

@@ -75,6 +75,20 @@ Without ``budget_bytes`` the engine runs cache-less (seed behaviour):
 per-request streaming against ``m_peak``, no cross-model state, and
 global-FIFO response order (interleaving defaults on only with a shared
 pool; pass ``interleave=`` explicitly to override either way).
+
+Unified memory budget (PR 7): with ``kv=KVSpec(...)`` and/or
+``arena=True`` the shared pool prices more than weights — each model
+reserves a profile-guided activation arena for the duration of a batch
+(``core.arena.arena_size``), and every active sequence pins paged KV
+blocks that GROW per decode step, so admission, shedding, and the
+deadline-aware batch cap see true memory pressure instead of a
+weights-only fiction. ``plan_multi_model`` receives matching
+``ReservationSpec``s and trades weights vs KV vs activations in one
+water-filling pass; KV pages are offloaded (evict-warm) on preemption
+and re-pinned on resume, dropped when the sequence finishes, with the
+recompute-vs-reload restream cost carried by ``KVSpec.restore``. With
+neither knob set, serving outputs and the cache byte ledger are
+bit-for-bit the weights-only path.
 """
 from __future__ import annotations
 
@@ -88,7 +102,8 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.allocator import MixSpec, MixTracker
+from repro.core.allocator import MixSpec, MixTracker, ReservationSpec
+from repro.core.arena import arena_size
 from repro.core.capacity import HWSpec, capacities
 from repro.core.latency_model import BatchLatencyEstimator
 from repro.core.opg import OPGProblem
@@ -103,7 +118,7 @@ from repro.serving.stream import RequestStream
 from repro.serving.types import (Request, Response, SLOConfig,
                                  deadline_miss_rate, per_priority_stats,
                                  priority_miss_rate, rejection_rate)
-from repro.serving.weight_cache import WeightCache
+from repro.serving.weight_cache import KVSpec, WeightCache
 
 __all__ = ["Request", "Response", "SLOConfig", "ModelReport",
            "ServeSession", "ServingEngine"]
@@ -144,6 +159,9 @@ class _RunningBatch:
     t_start: float = 0.0
     started: bool = False
     charged_s: float = 0.0          # virtual seconds ticked so far
+    # unified-budget accounting: decode tokens already charged to the KV
+    # pool per member sequence (None until the batch starts / non-unified)
+    kv_done: Optional[Dict] = None
 
     def remaining_s(self, cost: BatchLatencyEstimator) -> float:
         if self.state is None:
@@ -280,7 +298,11 @@ class ServingEngine:
                  interleave: Optional[bool] = None,
                  eviction: str = "lru",
                  mix: Optional[MixSpec] = None,
-                 alloc_mode: str = "auto"):
+                 alloc_mode: str = "auto",
+                 kv: Optional[KVSpec] = None,
+                 kv_seq_tokens: int = 0,
+                 kv_target_seqs: int = 4,
+                 arena: bool = False):
         assert policy in ("stream", "preload")
         self.policy = policy
         self.chunk_bytes = chunk_bytes
@@ -296,8 +318,19 @@ class ServingEngine:
         self.mix = (mix if isinstance(mix, MixSpec) or mix is None
                     else MixSpec.from_rates(dict(mix)))
         self.alloc_mode = alloc_mode
+        # unified budget pool (PR 7): KV pages + activation arenas join
+        # the weight chunks in one budget. kv_seq_tokens is the planned
+        # context length per sequence for reservation sizing (0 = the
+        # model's built seq length); kv_target_seqs is the concurrency
+        # the allocator funds per model
+        self.kv_spec = kv
+        self.kv_seq_tokens = int(kv_seq_tokens)
+        self.kv_target_seqs = int(kv_target_seqs)
+        self.use_arena = bool(arena)
         self.cache = WeightCache(budget_bytes, policy=eviction,
-                                 disk_bw=disk_bw) if budget_bytes else None
+                                 disk_bw=disk_bw,
+                                 kv=kv) if budget_bytes else None
+        self.unified = self.cache is not None and (kv is not None or arena)
         self.prefetch = prefetch and self.cache is not None
         # default: interleave only with a shared pool; cache-less mode keeps
         # the seed engine's global-FIFO response order (callers pair
@@ -327,8 +360,14 @@ class ServingEngine:
         # drift trigger and plan swap, with the cache-ledger snapshots
         # that prove the swap reused resident bytes instead of evicting
         self.replan_log: List[dict] = []
+        # unified-budget observability: every KV/arena pool event —
+        # (t, model, event, bytes) with event in {"grow", "grow_rejected",
+        # "offload", "drop", "resume", "arena", "arena_rejected"}
+        self.kv_log: List[tuple] = []
         self.mix_tracker: Optional[MixTracker] = None
         self.cost_model: Optional[BatchLatencyEstimator] = None
+        self._kv_tok_bytes: Dict[str, int] = {}
+        self._arena_need: Dict[str, int] = {}
         self._model_bytes_total: Dict[str, int] = {}
         self._executors: Dict[str, object] = {}
         self._protected: Dict[str, List[tuple]] = {}
@@ -339,6 +378,8 @@ class ServingEngine:
         self.models[name] = model
         self._planned = False
         self._model_bytes_total.pop(name, None)
+        self._kv_tok_bytes.pop(name, None)
+        self._arena_need.pop(name, None)
         # re-planning replaces EVERY model's plan (the budget is shared),
         # so every cached executor is stale, not just this model's
         self._executors.clear()
@@ -350,6 +391,56 @@ class ServingEngine:
             sol = solve(prob, self.solver_cfg)
             self.plans[name] = OverlapPlan.from_solution(prob, sol)
 
+    # -- unified-budget sizing (PR 7) --------------------------------------
+    def _kv_token_bytes(self, name: str) -> int:
+        """Bytes of KV cache one decoded token adds for `name`: K and V
+        per attention layer at the graph's dtype (HostModel builds with
+        dtype_bytes=4), GQA-aware via n_kv_heads."""
+        b = self._kv_tok_bytes.get(name)
+        if b is None:
+            m = self.models[name]
+            n_attn = sum(1 for op in m.graph.ops if op.kind == "attention")
+            b = 2 * n_attn * m.cfg.n_kv_heads * m.cfg.resolved_head_dim * 4
+            self._kv_tok_bytes[name] = b
+        return b
+
+    def _kv_seq_bytes(self, name: str, tokens: int) -> int:
+        """Page-aligned KV bytes a `tokens`-long context pins."""
+        page = self.kv_spec.page_bytes
+        raw = self._kv_token_bytes(name) * max(0, int(tokens))
+        return -(-raw // page) * page if raw else 0
+
+    def _arena_bytes(self, name: str) -> int:
+        need = self._arena_need.get(name)
+        if need is None:
+            need = arena_size(self.models[name].graph)
+            self._arena_need[name] = need
+        return need
+
+    def _build_reserves(self) -> Optional[Dict[str, ReservationSpec]]:
+        """Per-model ReservationSpecs for the joint allocator — None when
+        the engine runs the weights-only path (keeps plan_multi_model
+        bit-for-bit the pre-PR call)."""
+        if not self.unified:
+            return None
+        out: Dict[str, ReservationSpec] = {}
+        for n, m in self.models.items():
+            ab = self._arena_bytes(n) if self.use_arena else 0
+            sb = tgt = 0
+            ben = 0.0
+            if self.kv_spec is not None and self.kv_target_seqs > 0:
+                toks = self.kv_seq_tokens or m.seq
+                sb = self._kv_seq_bytes(n, toks)
+                tgt = self.kv_target_seqs if sb else 0
+                # admitting one more resident sequence saves its restream
+                # cost (reload bytes or recompute-equivalents) per visit
+                bw = self.disk_bw if self.disk_bw > 0 else self.hw.stream_bw
+                pages = sb // self.kv_spec.page_bytes
+                ben = self.kv_spec.restore_bytes() * pages / bw
+            out[n] = ReservationSpec(arena_bytes=ab, kv_seq_bytes=sb,
+                                     kv_target_seqs=tgt, kv_benefit_s=ben)
+        return out
+
     def _ensure_planned(self):
         if self._planned:
             return
@@ -358,7 +449,7 @@ class ServingEngine:
                 {n: m.graph for n, m in self.models.items()},
                 self.chunk_bytes, self.budget_bytes, hw=self.hw,
                 solver_cfg=self.solver_cfg, mix=self.mix,
-                alloc_mode=self.alloc_mode)
+                alloc_mode=self.alloc_mode, reserves=self._build_reserves())
             self.plans = dict(self.multi_plan.plans)
         self._planned = True
 
@@ -616,6 +707,116 @@ class ServingEngine:
         for key in self._protected.pop(name, []):
             self.cache.release(key)
 
+    # -- unified-budget runtime (PR 7) -------------------------------------
+    @staticmethod
+    def _sid(r: Request):
+        """KV sequence key for a request: the caller's correlation id when
+        present (stable across a Router retry) else object identity."""
+        return r.req_id if r.req_id is not None else id(r)
+
+    def _kv_need_bytes(self, name: str, r: Request) -> int:
+        """Page-aligned KV bytes `r` will pin end-to-end: prompt prefill
+        plus its planned decode tokens."""
+        return self._kv_seq_bytes(name, len(r.tokens) + r.decode_tokens)
+
+    def _kv_batch_begin(self, name: str, item: _RunningBatch, t: float):
+        """Charge a starting batch's fixed reservations to the pool: the
+        model's activation arena for the duration of the batch, and each
+        member sequence's prompt KV (prefill writes the whole context)."""
+        cache = self.cache
+        if self.use_arena:
+            nb = self._arena_bytes(name)
+            ok = cache.reserve_arena(name, nb)
+            self.kv_log.append((t, name, "arena" if ok
+                                else "arena_rejected", nb))
+        if self.kv_spec is None:
+            return
+        item.kv_done = {}
+        for r in item.batch.requests:
+            sid = self._sid(r)
+            item.kv_done[sid] = 0
+            nb = self._kv_token_bytes(name) * len(r.tokens)
+            if nb and not cache.kv_grow(name, sid, nb):
+                self.kv_log.append((t, name, "grow_rejected", nb))
+            elif nb:
+                self.kv_log.append((t, name, "grow", nb))
+
+    def _kv_decode_growth(self, name: str, item: _RunningBatch, t: float):
+        """Charge decode-step KV growth after an executed segment, prorated
+        by plan progress: a request with ``decode_tokens`` planned has
+        written ``decode_tokens * completed_frac`` of them by this op
+        boundary. The page tail in the cache accumulates raw bytes, so
+        incremental charges never over-allocate pages."""
+        if item.kv_done is None:
+            return
+        frac = 1.0 if item.state is None else \
+            min(1.0, item.state.op_idx / max(item.n_ops, 1))
+        per_tok = self._kv_token_bytes(name)
+        for r in item.batch.requests:
+            sid = self._sid(r)
+            target = int(r.decode_tokens * frac)
+            delta = target - item.kv_done.get(sid, 0)
+            if delta <= 0:
+                continue
+            if self.cache.kv_grow(name, sid, delta * per_tok):
+                self.kv_log.append((t, name, "grow", delta * per_tok))
+            else:
+                self.kv_log.append((t, name, "grow_rejected",
+                                    delta * per_tok))
+            item.kv_done[sid] = target
+
+    def _kv_suspend(self, name: str, item: _RunningBatch, t: float):
+        """A batch was preempted: its sequences' pages are offloaded in
+        place (unpinned — warm, evictable at the restore cost) and the
+        arena reservation ends so the preempting model's scratch fits."""
+        if item.kv_done is not None:
+            for r in item.batch.requests:
+                sid = self._sid(r)
+                pages = self.cache.kv_release(name, sid)
+                self.kv_log.append((t, name, "offload",
+                                    pages * self.kv_spec.page_bytes))
+        if self.use_arena:
+            self.cache.release_arena(name)
+
+    def _kv_resume_batch(self, name: str, item: _RunningBatch, t: float):
+        """A suspended batch resumes: re-reserve the arena and re-pin each
+        sequence's pages, restoring (reload or recompute) the ones evicted
+        while it was offloaded. A sequence that cannot be restored is
+        logged and its bytes re-charged lazily by the next decode step."""
+        if self.use_arena:
+            nb = self._arena_bytes(name)
+            ok = self.cache.reserve_arena(name, nb)
+            self.kv_log.append((t, name, "arena" if ok
+                                else "arena_rejected", nb))
+        if item.kv_done is None:
+            return
+        for r in item.batch.requests:
+            sid = self._sid(r)
+            got = self.cache.kv_resume(name, sid)
+            if got is None:
+                self.kv_log.append((t, name, "resume_rejected",
+                                    self.cache.kv_seq_bytes(name, sid)))
+            else:
+                self.kv_log.append((t, name, "resume",
+                                    got[1] * self.kv_spec.page_bytes))
+
+    def _kv_finish(self, name: str, item: _RunningBatch,
+                   t: float) -> Dict:
+        """A batch completed: drop every member sequence's pages (the
+        context is dead) and unpin the arena (warm scratch for the model's
+        next batch). Returns per-sequence KV bytes held at completion —
+        the Response's ``kv_bytes`` field."""
+        out: Dict = {}
+        if item.kv_done is not None:
+            for r in item.batch.requests:
+                sid = self._sid(r)
+                out[sid] = self.cache.kv_seq_bytes(name, sid)
+                self.cache.kv_release(name, sid, drop=True)
+                self.kv_log.append((t, name, "drop", out[sid]))
+        if self.use_arena:
+            self.cache.release_arena(name)
+        return out
+
     # -- online re-planning (serve(replan=True)) ---------------------------
     def _replan_worker(self, mix: MixSpec, slot: dict):
         """Background thread body: compute a fresh MultiModelPlan for the
@@ -626,7 +827,7 @@ class ServingEngine:
                 {n: m.graph for n, m in self.models.items()},
                 self.chunk_bytes, self.budget_bytes, hw=self.hw,
                 solver_cfg=self.solver_cfg, mix=mix,
-                alloc_mode=self.alloc_mode)
+                alloc_mode=self.alloc_mode, reserves=self._build_reserves())
         except Exception as e:  # noqa: BLE001 — surfaced via replan_log,
             slot["error"] = e  # a planner bug must not strand the queue
 
@@ -966,6 +1167,17 @@ class ServingEngine:
                 # observed OFFERED mix (rejected arrivals included): the
                 # split should follow traffic, not the admission filter
                 tracker.observe(r.model, now)
+            if admission and self.unified and self.kv_spec is not None:
+                # true-memory-pressure admission: a sequence whose
+                # end-to-end KV (prompt + planned decode) can never fit
+                # alongside the model's arena is infeasible at ANY queue
+                # depth — reject it now instead of serving it into a
+                # mid-decode grow failure
+                cap = self.cache.budget_bytes \
+                    - (self._arena_bytes(r.model) if self.use_arena else 0)
+                if self._kv_need_bytes(r.model, r) > cap:
+                    reject(r, now, math.inf, "kv")
+                    return
             d = deadline_of(r)
             if admission and math.isfinite(d):
                 # the in-flight batch delays r only if it finishes first
@@ -1067,6 +1279,10 @@ class ServingEngine:
                 # goes next
                 item, ses.suspended = ses.suspended, None
                 name = item.name
+                if self.unified:
+                    # re-pin the batch's offloaded KV pages (restoring any
+                    # evicted meanwhile) and re-reserve its arena
+                    self._kv_resume_batch(name, item, now)
             else:
                 q = pending[name]
                 if admission:
@@ -1088,6 +1304,31 @@ class ServingEngine:
                     if not q:
                         continue
                 group = self._take_group(q, batcher)
+                if self.unified and self.kv_spec is not None \
+                        and len(group) > 1:
+                    # KV-pressure batch cap: pinned bytes cannot be
+                    # evicted, so the batch's end-to-end KV demand must
+                    # fit inside budget − pinned. Keep the longest prefix
+                    # that fits (the head always runs — its grow failures
+                    # surface in kv_log, never a livelock) and requeue the
+                    # rest at the FRONT (FIFO preserved), logged alongside
+                    # the deadline cap's truncations.
+                    headroom = self.cache.budget_bytes \
+                        - self.cache.pinned_bytes()
+                    acc = self._kv_need_bytes(name, group[0])
+                    keep = 1
+                    for r2 in group[1:]:
+                        nb = self._kv_need_bytes(name, r2)
+                        if acc + nb > headroom:
+                            break
+                        acc += nb
+                        keep += 1
+                    if keep < len(group):
+                        for r2 in reversed(group[keep:]):
+                            q.appendleft(r2)
+                        self.defer_log.append((now, name, keep,
+                                               len(group) - keep))
+                        group = group[:keep]
                 bcfg = batcher or BatcherConfig()
                 if batch_cap and len(group) > 1:
                     # deadline-aware feasibility cap: stop admitting
@@ -1126,6 +1367,9 @@ class ServingEngine:
                 item.t_start = clock.now()
                 self.batch_log.append((item.t_start, name, item.batch.size))
                 item.started = True
+                if self.unified:
+                    # arena for the batch + each member's prompt KV
+                    self._kv_batch_begin(name, item, item.t_start)
             yield_check = None
             if preempt and ses.suspended is None and self.policy == "stream":
                 seg_v0 = clock.now()
@@ -1179,8 +1423,16 @@ class ServingEngine:
             seg_real = time.perf_counter() - seg_real_t0
             item.charged_s += clock.tick(seg_real, name, frac=frac,
                                          batch_size=item.batch.size)
+            if self.unified:
+                # decode steps executed this segment wrote KV: charge the
+                # growth so the next admission/cap decision sees it
+                self._kv_decode_growth(name, item, clock.now())
             self._stop_prefetch(prefetcher, pf_stop)
             if not done:
+                if self.unified:
+                    # offload the preempted batch's pages (warm) and free
+                    # its arena for whoever runs next
+                    self._kv_suspend(name, item, clock.now())
                 self.preempt_log.append((clock.now(), name,
                                          item.state.op_idx))
                 ses.suspended = item
@@ -1198,6 +1450,7 @@ class ServingEngine:
             for j, r in enumerate(stats.residency):
                 self.timeline.append((t0 + dt * (j + 1) / n, r, name))
             finish = clock.now()
+            kvb = self._kv_finish(name, item, finish) if self.unified else {}
             for req, res in zip(batch.requests,
                                 split_batch_result(batch, result)
                                 if result is not None
@@ -1214,7 +1467,8 @@ class ServingEngine:
                     queue_s=max(0.0, t0 - req.arrival_s),
                     batch_size=batch.size,
                     deadline_s=d if math.isfinite(d) else req.deadline_s,
-                    priority=req.priority, req_id=req.req_id))
+                    priority=req.priority, req_id=req.req_id,
+                    kv_bytes=kvb.get(self._sid(req), 0)))
             last = name
             yield ("batch", (name, item.charged_s))
         if replan_thread is not None:

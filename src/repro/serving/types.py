@@ -50,10 +50,18 @@ class Request:
     # to tracked requests across retries (a retry is a NEW Request object
     # with the same req_id)
     req_id: Optional[int] = None
+    # planned decode length (generated tokens): with a unified budget pool
+    # (engine kv=KVSpec(...)) the engine charges this sequence's paged KV
+    # growth — prompt prefill plus decode_tokens, prorated per executed
+    # segment — against the shared budget. 0 = prefill-only accounting.
+    decode_tokens: int = 0
 
     def __post_init__(self):
         if self.priority < 0:
             raise ValueError(f"priority must be >= 0, got {self.priority}")
+        if self.decode_tokens < 0:
+            raise ValueError(f"decode_tokens must be >= 0, "
+                             f"got {self.decode_tokens}")
 
 
 @dataclass
@@ -80,6 +88,9 @@ class Response:
     priority: float = 1.0
     # echo of Request.req_id (None when the caller didn't assign one)
     req_id: Optional[int] = None
+    # KV bytes this request's sequence held in the unified pool at
+    # completion (0 under weights-only serving)
+    kv_bytes: int = 0
 
     @property
     def finish_s(self) -> float:

@@ -1,0 +1,437 @@
+"""Unified budget pool (PR 7): typed reservations — weight chunks, paged
+KV blocks, activation arenas — sharing one ``WeightCache`` budget, the
+``allocate_joint`` reserves pass that prices them together, and the
+serving engine's per-step KV charging.
+
+Also the PR's two eviction-rollback regressions:
+
+  * a REJECTED put must leave residency, LRU order, and the byte ledger
+    exactly as they were (two-phase eviction; the old one-at-a-time walk
+    leaked partial evictions on the rejection path);
+  * a double-release of a present-but-unpinned entry is a pin-accounting
+    bug and must be COUNTED (``release_underflows``, failing
+    ``ledger_balanced``) instead of silently no-oping.
+"""
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs.gptneo import GPTNEO_S
+from repro.core.allocator import (BudgetInfeasibleError, MixSpec,
+                                  ReservationSpec, allocate_joint)
+from repro.core.arena import (ActInterval, arena_size, assign_offsets,
+                              activation_intervals)
+from repro.core.capacity import HWSpec
+from repro.core.graph import build_lm_graph
+from repro.core.plan import plan_multi_model
+from repro.core.streaming import HostModel, PreloadExecutor
+from repro.serving.clock import SimClock
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.stream import RequestStream
+from repro.serving.weight_cache import KVSpec, WeightCache
+
+HW = HWSpec(peak_flops=5e10, hbm_bw=2e10, stream_bw=1e10)
+CHUNK = 32 << 10
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: rejected put leaves the pool untouched (two-phase eviction)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "cost"])
+def test_rejected_put_leaves_pool_untouched(policy):
+    """The regression: several unpinned victims exist, but even evicting
+    ALL of them cannot fit the incoming entry (a pinned entry blocks).
+    One-at-a-time eviction used to evict the victims anyway and then
+    reject — residency silently shrank. Two-phase eviction must reject
+    with keys, LRU order, pins, and the ledger bit-for-bit unchanged."""
+    c = WeightCache(budget_bytes=100, policy=policy)
+    assert c.put(("m", "pinned", 0), "p", 60, pin=True)
+    assert c.put(("m", "u1", 0), "a", 20)
+    assert c.put(("m", "u2", 0), "b", 20)
+    before_keys = c.keys()                      # insertion order = LRU order
+    before_snap = c.stats_snapshot()
+    before_rejected = c.stats.rejected_puts
+
+    # needs 50 free; evicting u1+u2 only frees 40 — must be rejected
+    assert not c.put(("m", "big", 0), "x", 50)
+
+    assert c.keys() == before_keys              # residency AND order intact
+    assert c.stats_snapshot() == before_snap    # zero evictions, zero bytes
+    assert c.stats.rejected_puts == before_rejected + 1
+    assert c.used_bytes() == 100
+    assert c.pins(("m", "pinned", 0)) == 1
+    assert c.ledger_balanced()
+
+
+def test_rejected_kv_grow_and_resume_leave_pool_untouched():
+    """The same two-phase discipline must hold for the KV paths: a grow
+    or resume the budget cannot admit changes nothing."""
+    c = WeightCache(budget_bytes=100, kv=KVSpec(page_bytes=10))
+    assert c.put(("m", "pinned", 0), "p", 80, pin=True)
+    assert c.kv_grow("m", "s1", 15)             # 2 pages, pinned
+    snap = c.stats_snapshot()
+    keys = c.keys()
+
+    assert not c.kv_grow("m", "s2", 25)         # 3 pages > 0 free
+    assert c.stats_snapshot() == snap and c.keys() == keys
+    assert c.stats.kv_rejections == 1
+    assert c.kv_seq_bytes("m", "s2") == 0       # nothing charged
+
+    # preempt s1, pin a weight into one page's bytes, then try to resume:
+    # the resume pins s1's one resident page FIRST (so victim selection
+    # can't cannibalize it), finds the missing page can never fit, and
+    # must roll that pin back — the pool exactly as before the call
+    assert c.kv_release("m", "s1") == 2
+    assert c.put(("m", "w", 0), "w", 10, pin=True)  # evicts warm page 0
+    assert c.kv_resident_pages("m", "s1") == (1, 2)
+    pinned_before = c.pinned_bytes()
+    snap2 = c.stats_snapshot()
+    assert c.kv_resume("m", "s1") is None       # 80 + 10 + 10 all pinned
+    assert c.stats.kv_rejections == 2
+    assert c.pinned_bytes() == pinned_before    # repin rolled back
+    assert c.stats_snapshot() == snap2
+    assert c.kv_resident_pages("m", "s1") == (1, 2)
+    assert c.ledger_balanced()
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: double-release is detected, not masked
+# ---------------------------------------------------------------------------
+
+def test_double_release_counts_underflow_and_fails_ledger():
+    c = WeightCache(budget_bytes=100)
+    key = ("m", "w", 0)
+    assert c.put(key, "v", 10, pin=True)
+    c.release(key)                              # legitimate: pin 1 -> 0
+    assert c.ledger_balanced()
+
+    c.release(key)                              # the bug: pin already 0
+    assert c.stats.release_underflows == 1
+    assert c.model_stats("m").release_underflows == 1
+    assert not c.ledger_balanced()
+    assert c.stats_snapshot()["release_underflows"] == 1
+    assert "release_underflows" in c.stats.as_dict()
+
+    # the pin count is not corrupted (stays 0: entry is still evictable)
+    assert c.pins(key) == 0
+    assert c.put(("m", "w2", 0), "v2", 100)     # evicts key to fit
+    assert not c.contains(key)
+
+    # releasing an ABSENT key stays a legitimate no-op (consumed entries)
+    c.release(("m", "gone", 7))
+    assert c.stats.release_underflows == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: seeded random-op property test over the unified pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "cost"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_unified_random_ops_invariants(policy, seed):
+    """Interleaved weight puts, KV pins/appends, sequence finishes and
+    preempt/resume cycles, arena reservations: the pool never exceeds
+    its budget, never evicts a pinned page of an ACTIVE sequence, and
+    the byte ledger balances throughout — under both eviction policies."""
+    rng = np.random.default_rng(seed)
+    page = 64
+    budget = 4096
+    c = WeightCache(budget_bytes=budget, policy=policy,
+                    kv=KVSpec(page_bytes=page,
+                              restore="recompute" if seed % 2 else "reload"))
+    models = ["a", "b"]
+    seqs = [(m, i) for m in models for i in range(4)]
+    active = set()                              # (model, seq_id) pinned live
+    pinned_weights = []                         # keys we hold pins on
+
+    def check():
+        assert c.used_bytes() <= budget
+        assert c.ledger_balanced(), c.stats.as_dict()
+        for m, s in active:                     # live context fully resident
+            res, tot = c.kv_resident_pages(m, s)
+            assert res == tot, (m, s, res, tot)
+        for k in pinned_weights:                # held pins never evicted
+            assert c.contains(k), k
+
+    for step in range(400):
+        op = rng.integers(0, 6)
+        m = models[rng.integers(0, len(models))]
+        if op == 0:                             # weight put, sometimes pinned
+            k = (m, f"w{rng.integers(0, 8)}", int(rng.integers(0, 4)))
+            pin = bool(rng.integers(0, 4) == 0) and k not in pinned_weights
+            ok = c.put(k, None, int(rng.integers(16, 512)), pin=pin,
+                       restream_bytes=int(rng.integers(0, 512)))
+            if ok and pin:
+                pinned_weights.append(k)
+        elif op == 1 and pinned_weights:        # proper pin/release pairing
+            c.release(pinned_weights.pop(rng.integers(0, len(pinned_weights))))
+        elif op == 2:                           # grow an active/fresh seq
+            # (preempted sequences must kv_resume first — the engine's
+            # contract: growth is only charged to ACTIVE sequences)
+            cand = [s for s in seqs if s in active
+                    or c.kv_resident_pages(*s)[1] == 0]
+            if cand:
+                sk = cand[rng.integers(0, len(cand))]
+                if c.kv_grow(*sk, int(rng.integers(1, 3 * page))):
+                    active.add(sk)
+                # rejection: if active, its pages must STAY pinned (check())
+        elif op == 3 and active:                # finish or preempt
+            sk = sorted(active)[rng.integers(0, len(active))]
+            drop = bool(rng.integers(0, 2))
+            c.kv_release(*sk, drop=drop)
+            active.discard(sk)
+            if drop:
+                assert c.kv_seq_bytes(*sk) == 0
+        elif op == 4:                           # resume a preempted sequence
+            cand = [s for s in seqs if s not in active
+                    and c.kv_resident_pages(*s)[1] > 0]
+            if cand:
+                sk = cand[rng.integers(0, len(cand))]
+                got = c.kv_resume(*sk)
+                if got is not None:
+                    res, tot = c.kv_resident_pages(*sk)
+                    assert res == tot == sum(got)
+                    active.add(sk)
+        else:                                   # arena reserve / release
+            if rng.integers(0, 2):
+                c.reserve_arena(m, int(rng.integers(0, 1024)))
+            else:
+                c.release_arena(m, drop=bool(rng.integers(0, 2)))
+        check()
+
+    for sk in seqs:                             # drain: active AND warm
+        c.kv_release(*sk, drop=True)            # preempted pages all leave
+    for k in pinned_weights:
+        c.release(k)
+    for m in models:
+        c.release_arena(m, drop=True)
+    assert c.ledger_balanced()
+    assert c.kv_bytes() == 0
+
+
+def test_kind_bytes_tracks_typed_breakdown():
+    c = WeightCache(budget_bytes=1000, kv=KVSpec(page_bytes=50))
+    assert c.put(("m", "w", 0), None, 300)
+    assert c.kv_grow("m", "s", 120)             # 3 pages = 150
+    assert c.reserve_arena("m", 200)
+    assert c.kind_bytes() == {"weight": 300, "kv": 150, "arena": 200}
+    assert c.kv_bytes() == 150
+    assert c.pinned_bytes() == 350              # kv pages + arena
+    assert c.arena_bytes("m") == 200
+
+
+# ---------------------------------------------------------------------------
+# allocator: the unified reserves pass
+# ---------------------------------------------------------------------------
+
+def _graphs(seq=64):
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    return {
+        "a": build_lm_graph(replace(base, name="a", num_layers=4),
+                            seq=seq, batch=1, dtype_bytes=4),
+        "b": build_lm_graph(replace(base, name="b", num_layers=2),
+                            seq=seq, batch=1, dtype_bytes=4),
+    }
+
+
+def test_reserves_fund_kv_and_arena_within_budget():
+    graphs = _graphs()
+    mix = MixSpec.uniform(graphs)
+    weights = sum(g.total_weight_bytes for g in graphs.values())
+    arenas = {n: arena_size(g) for n, g in graphs.items()}
+    seq_bytes = 64 << 10
+    budget = int(weights + sum(arenas.values()) + 6 * seq_bytes)
+    res = {n: ReservationSpec(arena_bytes=arenas[n], kv_seq_bytes=seq_bytes,
+                              kv_target_seqs=4,
+                              kv_benefit_s=seq_bytes / HW.stream_bw)
+           for n in graphs}
+    alloc = allocate_joint(graphs, CHUNK, budget, mix, hw=HW, reserves=res)
+    assert alloc.arena == arenas                # hard floors, off the top
+    assert sum(alloc.kv_seqs.values()) > 0      # spare funds live context
+    assert all(alloc.kv_split[n] == alloc.kv_seqs[n] * seq_bytes
+               for n in graphs)
+    used = sum(alloc.split.values()) + sum(alloc.kv_split.values()) \
+        + sum(alloc.arena.values())
+    assert used <= budget
+
+
+def test_reserves_none_is_bit_identical_to_weights_only():
+    graphs = _graphs()
+    mix = MixSpec.uniform(graphs)
+    budget = int(0.8 * sum(g.total_weight_bytes for g in graphs.values()))
+    base = allocate_joint(graphs, CHUNK, budget, mix, hw=HW)
+    same = allocate_joint(graphs, CHUNK, budget, mix, hw=HW, reserves=None)
+    assert base.split == same.split
+    assert same.kv_seqs == {} and same.kv_split == {} and same.arena == {}
+
+
+def test_brute_mode_with_reserves_raises():
+    graphs = _graphs()
+    res = {"a": ReservationSpec(kv_seq_bytes=1 << 20, kv_target_seqs=1,
+                                kv_benefit_s=0.01)}
+    with pytest.raises(ValueError, match="brute"):
+        allocate_joint(graphs, CHUNK, 64 << 20, MixSpec.uniform(graphs),
+                       hw=HW, mode="brute", reserves=res)
+
+
+def test_arena_reservations_can_make_budget_infeasible():
+    graphs = _graphs()
+    budget = int(0.8 * sum(g.total_weight_bytes for g in graphs.values()))
+    res = {n: ReservationSpec(arena_bytes=budget) for n in graphs}
+    with pytest.raises(BudgetInfeasibleError, match="arena"):
+        allocate_joint(graphs, CHUNK, budget, MixSpec.uniform(graphs),
+                       hw=HW, reserves=res)
+
+
+def test_plan_multi_model_records_reserves_and_guards_prefetch():
+    graphs = _graphs()
+    weights = sum(g.total_weight_bytes for g in graphs.values())
+    arenas = {n: arena_size(g) for n, g in graphs.items()}
+    seq_bytes = 64 << 10
+    budget = int(weights + sum(arenas.values()) + 6 * seq_bytes)
+    res = {n: ReservationSpec(arena_bytes=arenas[n], kv_seq_bytes=seq_bytes,
+                              kv_target_seqs=4,
+                              kv_benefit_s=seq_bytes / HW.stream_bw)
+           for n in graphs}
+    # reserves imply a mix (uniform) — no mix argument needed
+    mm = plan_multi_model(graphs, CHUNK, budget, hw=HW, reserves=res)
+    assert mm.meta["arena"] == arenas
+    assert sum(mm.meta["kv_seqs"].values()) > 0
+    reserved = mm.meta["reserved_bytes"]
+    assert reserved == sum(mm.meta["kv_split"].values()) \
+        + sum(mm.meta["arena"].values())
+    # prefetch for the next model must keep the reserved bytes clear
+    base = plan_multi_model(graphs, CHUNK, budget, hw=HW)
+    for n in graphs:
+        assert mm.prefetch_budget(n) <= base.prefetch_budget(n) - reserved \
+            + (base.peaks[n] - mm.peaks[n])
+
+
+# ---------------------------------------------------------------------------
+# activation arenas: profile-guided offset calculation
+# ---------------------------------------------------------------------------
+
+def test_assign_offsets_no_overlap_and_bounds():
+    rng = np.random.default_rng(0)
+    ivs = [ActInterval(f"t{i}", int(rng.integers(1, 100)),
+                       int(s := rng.integers(0, 30)),
+                       int(s + rng.integers(1, 8)))
+           for i in range(40)]
+    layout = assign_offsets(ivs)
+    placed = layout.offsets
+    assert len(placed) == len(ivs)
+    for i, (a, ao) in enumerate(placed):        # lifetimes overlap -> bytes
+        for b, bo in placed[i + 1:]:            # must be disjoint
+            if a.overlaps(b):
+                assert ao + a.size <= bo or bo + b.size <= ao, (a, b)
+    assert layout.size >= layout.peak_concurrent()
+    assert layout.size >= max(iv.size for iv in ivs)
+    # deterministic: same intervals, same placement
+    again = assign_offsets(list(ivs))
+    assert again.size == layout.size and again.offsets == layout.offsets
+
+
+def test_arena_size_covers_every_op_and_residuals():
+    g = _graphs()["a"]
+    ivs = activation_intervals(g)
+    assert any(iv.name.startswith("residual.") for iv in ivs)
+    peak = arena_size(g)
+    assert peak >= max(op.act_bytes for op in g.ops)
+    assert peak < sum(op.act_bytes for op in g.ops)   # sharing, not summing
+    assert arena_size(g) == peak                       # deterministic
+
+
+# ---------------------------------------------------------------------------
+# engine: unified serving charges KV + arenas without changing outputs
+# ---------------------------------------------------------------------------
+
+SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def pool():
+    base = replace(GPTNEO_S, d_model=128, n_heads=4, n_kv_heads=4,
+                   d_ff=512, vocab=512)
+    models = {
+        "a": HostModel.build(replace(base, name="a", num_layers=4),
+                             seq=SEQ, seed=0),
+        "b": HostModel.build(replace(base, name="b", num_layers=2),
+                             seq=SEQ, seed=1),
+    }
+    rng = np.random.default_rng(0)
+    trace = []
+    for i in range(8):
+        n = "a" if i % 2 == 0 else "b"
+        trace.append(Request(
+            model=n, arrival_s=0.01 * i, req_id=i, decode_tokens=SEQ,
+            tokens=rng.integers(0, 512, (1, SEQ), dtype=np.int32)))
+    refs = {r.req_id: np.asarray(PreloadExecutor(models[r.model])
+                                 .run(r.tokens).result) for r in trace}
+    budget = int(0.7 * sum(sum(a.nbytes for a in m.host_weights.values())
+                           for m in models.values()))
+    return models, trace, refs, budget
+
+
+def _engine(models, budget, **kw):
+    eng = ServingEngine(policy="stream", chunk_bytes=CHUNK,
+                        budget_bytes=budget, kv_seq_tokens=SEQ, **kw)
+    for n, m in models.items():
+        eng.register(n, m)
+    return eng
+
+
+def test_unified_serve_charges_kv_and_stays_exact(pool):
+    models, trace, refs, budget = pool
+    eng = _engine(models, budget, kv=KVSpec(page_bytes=4 << 10), arena=True)
+    assert eng.unified
+    res = eng.serve(RequestStream.from_trace(list(trace)), clock=SimClock())
+    served = [r for r in res if r.status == "ok"]
+    assert len(served) == len(trace)
+    for r in served:                            # accounting never changes math
+        assert np.array_equal(np.asarray(r.result), refs[r.req_id])
+        assert r.kv_bytes > 0                   # prompt + decode KV charged
+    events = {ev for *_t, ev, _b in eng.kv_log}
+    assert "grow" in events and "arena" in events
+    assert eng.cache.ledger_balanced()
+    assert eng.cache.kv_bytes() == 0            # finished seqs fully dropped
+    # the plan reserved real bytes for KV + arenas
+    assert eng.multi_plan.meta.get("reserved_bytes", 0) > 0
+
+
+def test_weights_only_path_stays_dormant(pool):
+    """No KVSpec, no arenas: the unified machinery must not wake up — the
+    pre-PR weights-only serving path, bit-for-bit."""
+    models, trace, refs, budget = pool
+    eng = _engine(models, budget)
+    assert not eng.unified
+    res = eng.serve(RequestStream.from_trace(list(trace)), clock=SimClock())
+    assert eng.kv_log == []
+    assert "reserved_bytes" not in eng.multi_plan.meta
+    for r in res:
+        assert r.status == "ok" and r.kv_bytes == 0
+        assert np.array_equal(np.asarray(r.result), refs[r.req_id])
+    assert eng.cache.kind_bytes().get("kv", 0) == 0
+    assert eng.cache.kind_bytes().get("arena", 0) == 0
+
+
+def test_admission_rejects_kv_infeasible_sequence(pool):
+    """A sequence whose end-to-end KV can never fit beside the model's
+    arena is rejected up front ("kv" in the admission log) instead of
+    being served into a mid-decode grow failure."""
+    models, trace, refs, budget = pool
+    eng = _engine(models, budget, kv=KVSpec(page_bytes=4 << 10), arena=True)
+    rng = np.random.default_rng(1)
+    doomed = Request(model="a", arrival_s=0.0, req_id=99,
+                     decode_tokens=10 ** 7,     # ~GBs of KV: never fits
+                     tokens=rng.integers(0, 512, (1, SEQ), dtype=np.int32))
+    res = eng.serve(RequestStream.from_trace(list(trace) + [doomed]),
+                    clock=SimClock(), admission=True)
+    by_id = {r.req_id: r for r in res}
+    assert by_id[99].status == "rejected"
+    assert any(kind == "kv" for *_x, kind in eng.admission_log)
+    for r in res:                               # everyone else unaffected
+        if r.req_id != 99 and r.status == "ok":
+            assert np.array_equal(np.asarray(r.result), refs[r.req_id])
+    assert eng.cache.ledger_balanced()

@@ -60,9 +60,10 @@ def test_budget_never_exceeded():
         n_kb = int(rng.integers(1, 4))
         pin = bool(rng.integers(0, 2))
         _put(c, f"m{i % 3}", f"w{i}", n_kb=n_kb, pin=pin)
-        if i % 7 == 0:                             # unpin a few at random
+        if i % 7 == 0:                             # unpin a few held entries
             for k in c.keys()[: 2]:
-                c.release(k)
+                if c.pins(k) > 0:
+                    c.release(k)
         assert c.used_bytes() <= c.budget_bytes
     assert c.used_bytes() <= c.budget_bytes
 
@@ -321,7 +322,8 @@ def test_random_ops_exercise_eviction_and_rejection(policy):
               _arr(n_kb), n_kb * KB, pin=bool(rng.integers(0, 4) == 0))
         if rng.integers(0, 5) == 0:
             for k in c.keys()[:2]:
-                c.release(k)
+                if c.pins(k) > 0:          # strict ledger: no blind releases
+                    c.release(k)
         assert c.used_bytes() <= c.budget_bytes
         assert c.ledger_balanced()
     assert c.stats.evictions > 0
