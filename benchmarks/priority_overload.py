@@ -20,8 +20,10 @@ regime where an uncapped late joiner blows the head's deadline — and the
 cost estimator is seeded with the same growth model, so every projection
 is bit-reproducible. Per-class metrics for the priority-blind baselines
 are computed by re-stamping each response with the priority its request
-carried in the weighted runs (keyed ``(model, arrival_s)``), so all four
-cells are judged on identical traffic.
+carried in the weighted runs (keyed by unique ``req_id`` — the
+``(model, arrival_s)`` key this used to rely on silently collapses two
+same-model requests with identical arrival stamps), so all four cells
+are judged on identical traffic.
 
 The expected shape (the ISSUE's acceptance criterion): at >= 2x overload
 ``wedf+cap`` strictly reduces the high-priority bad rate (missed or
@@ -49,7 +51,7 @@ from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
 from repro.serving.engine import ServingEngine
 from repro.serving.stream import (RequestStream, assign_priorities,
-                                  poisson_trace)
+                                  poisson_trace, stamp_req_ids)
 from repro.serving.types import SLOConfig, deadline_miss_rate
 from repro.core.streaming import HostModel, PreloadExecutor
 
@@ -86,7 +88,10 @@ def _trace(models, load_x: float, duration_s: float):
     per_model_rate = load_x / (EXEC_S * len(models))
     trace = poisson_trace({n: per_model_rate for n in models}, duration_s,
                           vocab=vocab, seq=SEQ, seed=13)
-    return assign_priorities(trace, PRIORITY_MIX, seed=17)
+    # unique req_ids BEFORE priorities: every per-request map below keys
+    # by req_id — (model, arrival_s) keys silently collapse two same-model
+    # requests with identical arrival stamps
+    return assign_priorities(stamp_req_ids(trace), PRIORITY_MIX, seed=17)
 
 
 def _serve(models, trace, budget, *, weighted: bool, capped: bool):
@@ -107,8 +112,8 @@ def _serve(models, trace, budget, *, weighted: bool, capped: bool):
                                          growth=BATCH_GROWTH),
         batcher=BatcherConfig(max_batch=MAX_BATCH, max_wait_s=0.02),
         batch_cap=capped)
-    stamped = {(r.model, r.arrival_s): r.priority for r in trace}
-    responses = [replace(r, priority=stamped[(r.model, r.arrival_s)])
+    stamped = {r.req_id: r.priority for r in trace}
+    responses = [replace(r, priority=stamped[r.req_id])
                  for r in responses]
     return eng, responses
 
@@ -136,7 +141,7 @@ def _metrics(eng, responses):
     return {
         "requests": rep["requests"],
         "served": rep["served"],
-        "batches": len(eng.batch_log),
+        "batches": eng.batch_log.total,
         "p50_s": float(np.percentile(lats, 50)),
         "p99_s": float(np.percentile(lats, 99)),
         "miss_rate": rep["miss_rate"],
@@ -164,8 +169,7 @@ def sweep(loads=(2.0, 4.0), duration_s=1.2, check_exact=True) -> dict:
               "loads": {}}
     for load in loads:
         trace = _trace(models, load, duration_s)
-        refs = {(r.model, r.arrival_s):
-                np.asarray(ref_ex[r.model].run(r.tokens).result)
+        refs = {r.req_id: np.asarray(ref_ex[r.model].run(r.tokens).result)
                 for r in trace} if check_exact else {}
         cell = {}
         for variant, (weighted, capped) in VARIANTS.items():
@@ -177,7 +181,7 @@ def sweep(loads=(2.0, 4.0), duration_s=1.2, check_exact=True) -> dict:
                     if r.status != "ok":
                         continue
                     assert np.array_equal(np.asarray(r.result),
-                                          refs[(r.model, r.arrival_s)]), \
+                                          refs[r.req_id]), \
                         f"{variant}@{load}x output diverged for {r.model}"
             cell[variant] = _metrics(eng, responses)
         # the acceptance shape: the full PR-5 config must not serve

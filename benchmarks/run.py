@@ -34,6 +34,7 @@ SUITES = [
     "mix_shift",
     "replica_fleet",
     "kv_budget",
+    "trace_scale",
     "ablation",
     "tradeoff",
     "naive_overlap",

@@ -302,7 +302,7 @@ def main(argv=None):
         served = [r for r in responses if r.status == "ok"]
         lats = [r.latency_s for r in served] or [float("nan")]
         line = (f"ONLINE {len(served)}/{len(responses)} requests served "
-                f"({len(engine.batch_log)} batches) "
+                f"({engine.batch_log.total} batches) "
                 f"mean latency {np.mean(lats):.3f}s "
                 f"p95 {np.percentile(lats, 95):.3f}s "
                 f"pool hit rate {engine.cache_hit_rate():.2f} "
@@ -329,9 +329,10 @@ def main(argv=None):
                         if e["event"] == "swap")
             line += f" replans={swaps}"
         if engine.unified:
-            grown = sum(b for *_e, ev, b in engine.kv_log if ev == "grow")
-            rej = sum(1 for *_e, ev, _b in engine.kv_log
-                      if ev.endswith("rejected"))
+            # exact streaming counters — the ring-buffered kv_log only
+            # retains a window at trace scale
+            grown = engine.kv_grown_bytes
+            rej = engine.kv_rejects
             line += (f" kv_grown_mb={grown / 1e6:.1f} "
                      f"kv_rejects={rej} reserved_mb="
                      f"{engine.multi_plan.meta.get('reserved_bytes', 0) / 1e6:.1f}"

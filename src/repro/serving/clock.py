@@ -22,6 +22,10 @@ from typing import Callable, Union
 class MonotonicClock:
     """Real time. ``tick`` is a no-op: execution already advanced it."""
 
+    # real clocks can block on real events (RequestStream.wait_for_push);
+    # virtual ones cannot — the event-driven idle wait keys off this
+    virtual = False
+
     def now(self) -> float:
         return time.perf_counter()
 
@@ -51,6 +55,10 @@ class SimClock:
     so a matching estimator is exact from its priors). The default 0.0
     keeps every PR-2/PR-3 schedule bit-identical.
     """
+
+    # virtual time: sleeps advance instantly, so an event-driven idle
+    # wait must step the clock, never block on real pushes
+    virtual = True
 
     def __init__(self, start: float = 0.0,
                  exec_time: Union[None, float,

@@ -92,6 +92,8 @@ bit-for-bit the weights-only path.
 """
 from __future__ import annotations
 
+import bisect
+import itertools
 import math
 import threading
 import time
@@ -115,7 +117,7 @@ from repro.serving.batcher import (Batch, BatcherConfig, can_join, make_batch,
                                    split_batch_result)
 from repro.serving.clock import MonotonicClock
 from repro.serving.stream import RequestStream
-from repro.serving.types import (Request, Response, SLOConfig,
+from repro.serving.types import (Request, Response, RingLog, SLOConfig,
                                  deadline_miss_rate, per_priority_stats,
                                  priority_miss_rate, rejection_rate)
 from repro.serving.weight_cache import KVSpec, WeightCache
@@ -140,6 +142,111 @@ def weighted_urgency(latest_start: float, now: float,
         return math.inf
     slack = latest_start - now
     return now + (slack / priority if slack >= 0 else slack * priority)
+
+
+class _SortedQueue:
+    """Indexed sorted pending queue for the weighted-EDF ("slo")
+    scheduler — the de-quadratic replacement for the deque + O(n)
+    right-scan insert (PR 8).
+
+    Entries live in key-sorted buckets of ~``LOAD`` items
+    (``sortedcontainers``-style), keyed ``(virtual deadline, arrival_s,
+    admit seq)`` by the serve loop's ``keyfn``. Every component is
+    time-invariant per request, so an entry's key never changes while
+    queued and the sorted invariant holds without re-sorting. Admit is
+    O(log buckets + LOAD), head pop O(LOAD) memmove, and
+    ``rank_leq_vd`` — the admission controller's "how much queued work
+    runs before this deadline" count — is O(buckets + log LOAD) instead
+    of a full queue walk per arrival.
+
+    Order is bit-for-bit the old deque's: the old stable insert placed a
+    newcomer after the last entry with ``(vd, arrival) <=`` its key
+    (FIFO for exact ties == ascending admit seq), which is exactly
+    ascending ``(vd, arrival, seq)``; and the engine's front-requeues
+    (``appendleft`` of a just-popped group prefix, before any
+    intervening admit) re-insert entries by their ORIGINAL keys — the
+    minimal keys present — which IS the front under the invariant.
+    """
+
+    LOAD = 512
+
+    def __init__(self, keyfn: Callable[[Request], tuple]):
+        self._key = keyfn
+        self._keys: List[List[tuple]] = []
+        self._reqs: List[List[Request]] = []
+        self._maxes: List[tuple] = []
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __bool__(self) -> bool:
+        return self._len > 0
+
+    def __iter__(self):
+        for b in self._reqs:
+            yield from b
+
+    def __getitem__(self, i: int) -> Request:
+        if i < 0:
+            i += self._len
+        for b in self._reqs:
+            if i < len(b):
+                return b[i]
+            i -= len(b)
+        raise IndexError("queue index out of range")
+
+    def push(self, r: Request):
+        key = self._key(r)
+        if not self._keys:
+            self._keys, self._reqs, self._maxes = [[key]], [[r]], [key]
+            self._len = 1
+            return
+        bi = min(bisect.bisect_left(self._maxes, key),
+                 len(self._maxes) - 1)
+        keys = self._keys[bi]
+        i = bisect.bisect_right(keys, key)
+        keys.insert(i, key)
+        self._reqs[bi].insert(i, r)
+        self._maxes[bi] = keys[-1]
+        self._len += 1
+        if len(keys) > 2 * self.LOAD:
+            h = len(keys) // 2
+            reqs = self._reqs[bi]
+            self._keys[bi:bi + 1] = [keys[:h], keys[h:]]
+            self._reqs[bi:bi + 1] = [reqs[:h], reqs[h:]]
+            self._maxes[bi:bi + 1] = [keys[h - 1], keys[-1]]
+
+    # the engine's deferred-members requeue: re-inserting by the original
+    # (time-invariant) key reproduces the deque's front-requeue exactly —
+    # see the class docstring's invariant argument
+    appendleft = push
+
+    def popleft(self) -> Request:
+        if not self._len:
+            raise IndexError("pop from empty _SortedQueue")
+        self._keys[0].pop(0)
+        r = self._reqs[0].pop(0)
+        self._len -= 1
+        if not self._keys[0]:
+            del self._keys[0], self._reqs[0], self._maxes[0]
+        return r
+
+    def rank_leq_vd(self, vd: float) -> int:
+        """Count queued requests whose virtual deadline (key[0]) is
+        <= ``vd`` — replaces the per-arrival O(n) queue walk in the
+        admission controller's backlog estimate, same count."""
+        probe = (vd, math.inf, math.inf)
+        n = 0
+        for keys in self._keys:
+            if keys[0][0] > vd:
+                break               # buckets are sorted: later ones too
+            if keys[-1][0] <= vd:
+                n += len(keys)
+            else:
+                n += bisect.bisect_right(keys, probe)
+                break
+        return n
 
 
 @dataclass
@@ -221,21 +328,31 @@ class ServeSession:
     """
 
     def __init__(self, engine: "ServingEngine", stream: RequestStream,
-                 clock, poll_interval_s: float, **loop_kw):
+                 clock, poll_interval_s: float, step_mode: str = "event",
+                 **loop_kw):
+        if step_mode not in ("event", "poll"):
+            raise ValueError(f"unknown step_mode {step_mode!r}; "
+                             "expected 'event' or 'poll'")
         self.engine = engine
         self.stream = stream
         self.clock = clock
         self.poll_interval_s = poll_interval_s
+        self.step_mode = step_mode
         self.responses: List[Response] = []
+        # per-model pending queues: deque under fifo/static, _SortedQueue
+        # under the weighted-EDF "slo" scheduler
         self.pending: Dict[str, Deque[Request]] = {}
         self.suspended: Optional[_RunningBatch] = None
         self.done = False
         self.idle = False           # last step yielded "idle"
+        self.steps = 0              # step() calls that advanced the loop —
+                                    # the trace-scale O(events) check
         self._gen = engine._serve_loop(self, stream, clock, **loop_kw)
 
     def step(self) -> Tuple[str, object]:
         if self.done:
             return ("done", None)
+        self.steps += 1
         try:
             kind, payload = next(self._gen)
         except StopIteration:
@@ -254,11 +371,16 @@ class ServeSession:
         return n
 
     def next_time(self) -> float:
-        """Earliest clock reading at which stepping can make progress:
-        ``now`` when work is runnable, the next pending arrival when the
-        loop idles for one, ``+inf`` when it can never progress again
-        (done, or an open stream with nothing queued). The Router's pump
-        key."""
+        """The session's TRUE next-event time — the earliest clock
+        reading at which stepping can make progress: ``now`` when work is
+        runnable (queued requests, a suspended batch awaiting resume, or
+        a finished re-plan awaiting its swap boundary — the loop only
+        reports idle when none of those exist), the next pending arrival
+        when the loop idles for one, ``+inf`` when it can never progress
+        again (done, or an open stream with nothing queued — blocked on
+        an external push). The Router's pump key and the event-driven
+        ``run()``'s sleep target: idle gaps cost one step, not
+        O(gap / poll_interval_s)."""
         if self.done:
             return math.inf
         if not self.idle:
@@ -270,22 +392,48 @@ class ServeSession:
         return self.clock.now() if self.stream.exhausted else math.inf
 
     def run(self) -> List[Response]:
-        """Drain to completion, sleeping through idle gaps exactly as the
-        pre-session ``serve()`` loop did."""
+        """Drain to completion.
+
+        ``step_mode="event"`` (default): every idle gap costs ONE step.
+        Closed streams (trace replays) sleep exactly to the next arrival
+        — which the pre-PR-8 loop already did, so replays are bit-for-bit
+        identical under both modes. Open (live) streams on a real clock
+        park on the stream's push/close condition
+        (``RequestStream.wait_for_push``) until the next known arrival is
+        due or a producer signals, instead of burning a wake-up every
+        ``poll_interval_s``. Open streams on a VIRTUAL clock cannot block
+        on real producers and keep the legacy poll stepping.
+
+        ``step_mode="poll"``: the legacy fixed-interval stepping for open
+        streams — the equivalence-test baseline."""
+        event = self.step_mode == "event"
         while True:
             kind, payload = self.step()
             if kind == "done":
                 return self.responses
             if kind != "idle":
                 continue
-            if payload is not None:
-                gap = max(0.0, payload - self.clock.now())
+            if self.stream.closed:
+                # trace replay: the next event IS the next arrival
+                if payload is not None:
+                    self.clock.sleep(max(0.0, payload - self.clock.now()))
+                continue
+            if not event or getattr(self.clock, "virtual", False):
                 # a live producer may push an earlier request at any
-                # moment: only a closed stream earns the full sleep
-                self.clock.sleep(gap if self.stream.closed
-                                 else min(gap, self.poll_interval_s))
-            else:                   # live stream, nothing queued yet
-                self.clock.sleep(self.poll_interval_s)
+                # moment and a virtual clock cannot wait for one: step
+                # at most poll_interval_s ahead (the legacy behaviour)
+                gap = max(0.0, payload - self.clock.now()) \
+                    if payload is not None else self.poll_interval_s
+                self.clock.sleep(min(gap, self.poll_interval_s))
+                continue
+            # live stream, real clock: block until a push/close lands or
+            # the known next arrival comes due — one step per event
+            if payload is not None:
+                self.stream.wait_for_push(
+                    timeout=max(0.0, payload - self.clock.now()),
+                    before_s=payload)
+            else:
+                self.stream.wait_for_push()
 
 
 class ServingEngine:
@@ -302,7 +450,8 @@ class ServingEngine:
                  kv: Optional[KVSpec] = None,
                  kv_seq_tokens: int = 0,
                  kv_target_seqs: int = 4,
-                 arena: bool = False):
+                 arena: bool = False,
+                 log_cap: int = 10000):
         assert policy in ("stream", "preload")
         self.policy = policy
         self.chunk_bytes = chunk_bytes
@@ -341,29 +490,43 @@ class ServingEngine:
         self.plans: Dict[str, OverlapPlan] = {}
         self.multi_plan: Optional[MultiModelPlan] = None
         self.queue: List[Request] = []
-        self.timeline: List[tuple] = []       # (t, resident_bytes, model)
-        self.stats_log: List[RunStats] = []
+        # every decision log below is a bounded RingLog (PR 8): the most
+        # recent `log_cap` entries are retained for scenario assertions
+        # while `.total` and the streaming counters further down keep the
+        # lifetime aggregates exact — memory stays O(log_cap) over a
+        # 10^5+-request trace. Aggregates recomputed from retained
+        # entries (peak/avg memory, model_report) are approximations once
+        # a log wraps; `slo_report` never is.
+        self.log_cap = int(log_cap)
+        self.timeline = RingLog(log_cap)      # (t, resident_bytes, model)
+        self.stats_log = RingLog(log_cap)     # RunStats per executed batch
         # online-loop observability (serve()): every prefetch decision,
         # idle wait, and executed batch — what the scenario tests assert on
-        self.prefetch_log: List[tuple] = []   # (t, current, target, specul.)
-        self.idle_log: List[tuple] = []       # (t, next_arrival)
-        self.batch_log: List[tuple] = []      # (t, model, batch_size)
-        self.rejected: List[Request] = []     # arrivals for unknown models
+        self.prefetch_log = RingLog(log_cap)  # (t, current, target, specul.)
+        self.idle_log = RingLog(log_cap)      # (t, next_arrival)
+        self.batch_log = RingLog(log_cap)     # (t, model, batch_size)
+        self.rejected = RingLog(log_cap)      # arrivals for unknown models
         # SLO-loop observability: every admission decision against a
         # deadline and every preemption point — scenario-test ground truth
-        self.admission_log: List[tuple] = []  # (t, model, eta, deadline, kind)
-        self.preempt_log: List[tuple] = []    # (t, model, op_idx)
+        self.admission_log = RingLog(log_cap)  # (t, model, eta, deadl, kind)
+        self.preempt_log = RingLog(log_cap)   # (t, model, op_idx)
         # deadline-aware batch cap observability: every group the cap
         # truncated — (t, model, admitted_size, deferred_size)
-        self.defer_log: List[tuple] = []
+        self.defer_log = RingLog(log_cap)
         # online re-planning observability (serve(replan=True)): every
         # drift trigger and plan swap, with the cache-ledger snapshots
         # that prove the swap reused resident bytes instead of evicting
-        self.replan_log: List[dict] = []
+        self.replan_log = RingLog(log_cap)
         # unified-budget observability: every KV/arena pool event —
         # (t, model, event, bytes) with event in {"grow", "grow_rejected",
         # "offload", "drop", "resume", "arena", "arena_rejected"}
-        self.kv_log: List[tuple] = []
+        self.kv_log = RingLog(log_cap)
+        # exact streaming aggregates (survive ring-buffer truncation):
+        # what slo_report() and launch/serve.py read at trace scale
+        self.deferred_joins = 0               # members requeued by caps
+        self.admission_counts: Dict[str, int] = {}   # kind -> rejections
+        self.kv_grown_bytes = 0               # accepted KV pool growth
+        self.kv_rejects = 0                   # *_rejected pool events
         self.mix_tracker: Optional[MixTracker] = None
         self.cost_model: Optional[BatchLatencyEstimator] = None
         self._kv_tok_bytes: Dict[str, int] = {}
@@ -575,6 +738,14 @@ class ServingEngine:
             return min(cands, key=lambda n: (pending[n][0].arrival_s,
                                              -len(pending[n]))), False
         if scheduler != "static" and stream is not None:
+            # O(1) fast path: the next future arrival is almost always a
+            # warmable target — only scan deeper (O(n) nsmallest over a
+            # trace-scale heap) when the top can't be warmed
+            nxt = stream.peek_next()
+            if nxt is None:
+                return None, False
+            if nxt.model != current and nxt.model in self.models:
+                return nxt.model, True
             for r in stream.peek_upcoming():
                 if r.model != current and r.model in self.models:
                     return r.model, True
@@ -719,6 +890,18 @@ class ServingEngine:
         plus its planned decode tokens."""
         return self._kv_seq_bytes(name, len(r.tokens) + r.decode_tokens)
 
+    def _kv_event(self, entry: tuple):
+        """Record one ``(t, model, event, bytes)`` KV/arena pool event:
+        the ring-buffered ``kv_log`` entry plus the exact streaming
+        counters (``kv_grown_bytes`` / ``kv_rejects``) that stay correct
+        after the ring wraps."""
+        event, nbytes = entry[2], entry[3]
+        if event == "grow":
+            self.kv_grown_bytes += nbytes
+        elif event.endswith("rejected"):
+            self.kv_rejects += 1
+        self.kv_log.append(entry)
+
     def _kv_batch_begin(self, name: str, item: _RunningBatch, t: float):
         """Charge a starting batch's fixed reservations to the pool: the
         model's activation arena for the duration of the batch, and each
@@ -727,7 +910,7 @@ class ServingEngine:
         if self.use_arena:
             nb = self._arena_bytes(name)
             ok = cache.reserve_arena(name, nb)
-            self.kv_log.append((t, name, "arena" if ok
+            self._kv_event((t, name, "arena" if ok
                                 else "arena_rejected", nb))
         if self.kv_spec is None:
             return
@@ -737,9 +920,9 @@ class ServingEngine:
             item.kv_done[sid] = 0
             nb = self._kv_token_bytes(name) * len(r.tokens)
             if nb and not cache.kv_grow(name, sid, nb):
-                self.kv_log.append((t, name, "grow_rejected", nb))
+                self._kv_event((t, name, "grow_rejected", nb))
             elif nb:
-                self.kv_log.append((t, name, "grow", nb))
+                self._kv_event((t, name, "grow", nb))
 
     def _kv_decode_growth(self, name: str, item: _RunningBatch, t: float):
         """Charge decode-step KV growth after an executed segment, prorated
@@ -759,9 +942,9 @@ class ServingEngine:
             if delta <= 0:
                 continue
             if self.cache.kv_grow(name, sid, delta * per_tok):
-                self.kv_log.append((t, name, "grow", delta * per_tok))
+                self._kv_event((t, name, "grow", delta * per_tok))
             else:
-                self.kv_log.append((t, name, "grow_rejected",
+                self._kv_event((t, name, "grow_rejected",
                                     delta * per_tok))
             item.kv_done[sid] = target
 
@@ -773,7 +956,7 @@ class ServingEngine:
             for r in item.batch.requests:
                 sid = self._sid(r)
                 pages = self.cache.kv_release(name, sid)
-                self.kv_log.append((t, name, "offload",
+                self._kv_event((t, name, "offload",
                                     pages * self.kv_spec.page_bytes))
         if self.use_arena:
             self.cache.release_arena(name)
@@ -786,7 +969,7 @@ class ServingEngine:
         if self.use_arena:
             nb = self._arena_bytes(name)
             ok = self.cache.reserve_arena(name, nb)
-            self.kv_log.append((t, name, "arena" if ok
+            self._kv_event((t, name, "arena" if ok
                                 else "arena_rejected", nb))
         if item.kv_done is None:
             return
@@ -794,10 +977,10 @@ class ServingEngine:
             sid = self._sid(r)
             got = self.cache.kv_resume(name, sid)
             if got is None:
-                self.kv_log.append((t, name, "resume_rejected",
+                self._kv_event((t, name, "resume_rejected",
                                     self.cache.kv_seq_bytes(name, sid)))
             else:
-                self.kv_log.append((t, name, "resume",
+                self._kv_event((t, name, "resume",
                                     got[1] * self.kv_spec.page_bytes))
 
     def _kv_finish(self, name: str, item: _RunningBatch,
@@ -812,7 +995,7 @@ class ServingEngine:
                 sid = self._sid(r)
                 out[sid] = self.cache.kv_seq_bytes(name, sid)
                 self.cache.kv_release(name, sid, drop=True)
-                self.kv_log.append((t, name, "drop", out[sid]))
+                self._kv_event((t, name, "drop", out[sid]))
         if self.use_arena:
             self.cache.release_arena(name)
         return out
@@ -903,6 +1086,7 @@ class ServingEngine:
               clock=None, batcher: Optional[BatcherConfig] = None,
               scheduler: str = "arrival",
               poll_interval_s: float = 0.001,
+              step_mode: str = "event",
               speculative_lookahead_ops: int = 8,
               slo: Optional[SLOConfig] = None,
               admission: Optional[bool] = None,
@@ -924,6 +1108,14 @@ class ServingEngine:
         a ``SimClock`` and a trace stream the loop — including every
         prefetch, admission, and preemption decision in the logs — is
         fully deterministic.
+
+        ``step_mode`` (PR 8) picks how ``run()`` crosses idle gaps:
+        ``"event"`` (default) makes every gap cost one step — closed
+        streams sleep straight to the next arrival (bit-for-bit the old
+        behaviour) and live streams on a real clock park on the stream's
+        push/close condition; ``"poll"`` keeps the legacy
+        ``poll_interval_s`` stepping for open streams (the
+        equivalence-test baseline). See ``ServeSession.run``.
 
         ``scheduler`` selects run/prefetch-target picking:
           * "fifo" (alias "arrival") — global cross-model FIFO over queue
@@ -989,7 +1181,7 @@ class ServingEngine:
         iteration."""
         return self.serve_session(
             stream, clock=clock, batcher=batcher, scheduler=scheduler,
-            poll_interval_s=poll_interval_s,
+            poll_interval_s=poll_interval_s, step_mode=step_mode,
             speculative_lookahead_ops=speculative_lookahead_ops, slo=slo,
             admission=admission, preempt=preempt, batch_cap=batch_cap,
             cost_model=cost_model, replan=replan, replan_drift=replan_drift,
@@ -1000,6 +1192,7 @@ class ServingEngine:
     def serve_session(self, stream: RequestStream, *, clock=None,
                       scheduler: str = "arrival",
                       poll_interval_s: float = 0.001,
+                      step_mode: str = "event",
                       **kw) -> "ServeSession":
         """The steppable form of ``serve()``: build a ``ServeSession``
         whose ``step()`` advances the loop by one event (executed batch
@@ -1015,7 +1208,8 @@ class ServingEngine:
             raise ValueError(f"unknown scheduler {scheduler!r}; "
                              f"expected one of {SCHEDULERS}")
         return ServeSession(self, stream, clock or MonotonicClock(),
-                            poll_interval_s, scheduler=scheduler, **kw)
+                            poll_interval_s, step_mode=step_mode,
+                            scheduler=scheduler, **kw)
 
     def _serve_loop(self, ses: "ServeSession", stream: RequestStream,
                     clock, *, batcher: Optional[BatcherConfig] = None,
@@ -1067,8 +1261,6 @@ class ServingEngine:
         # can observe load / collect responses between steps; ses.suspended
         # is the single preemption slot
         pending = ses.pending
-        for n in self.models:
-            pending.setdefault(n, deque())
         out = ses.responses
         last: Optional[str] = None
         max_b = batcher.max_batch if batcher is not None else 1
@@ -1098,6 +1290,24 @@ class ServingEngine:
             if r.priority <= 0 or not math.isfinite(d):
                 return math.inf
             return r.arrival_s + (d - r.arrival_s) / r.priority
+
+        # admit-order sequence per request: the FIFO tie-break component
+        # of the _SortedQueue key (assigned lazily at first key
+        # computation == first insert; requeues reuse it, so a deferred
+        # member's key — and therefore its position — never changes).
+        # Serve-local like `derived`: caller Requests are never mutated.
+        seqs: Dict[int, int] = {}
+        seq_counter = itertools.count()
+
+        def qkey(r: Request) -> tuple:
+            s = seqs.get(id(r))
+            if s is None:
+                s = seqs[id(r)] = next(seq_counter)
+            return (vd_of(r), r.arrival_s, s)
+
+        for n in self.models:
+            pending.setdefault(
+                n, _SortedQueue(qkey) if sched == "slo" else deque())
 
         def urgency(name: str, t: Optional[float] = None) -> float:
             # latest feasible start for this queue's head (deadline minus
@@ -1135,8 +1345,10 @@ class ServingEngine:
             for n, q in pending.items():
                 if not q:
                     continue
-                ahead = len(q) if sched != "slo" else \
-                    sum(1 for r2 in q if vd_of(r2) <= vd)
+                # fifo/static: everything queued runs first (O(1) len);
+                # slo: only earlier-or-equal virtual deadlines do — the
+                # indexed rank replaces the per-arrival O(n) queue walk
+                ahead = len(q) if sched != "slo" else q.rank_leq_vd(vd)
                 # price the backlog at the batch sizes it will actually
                 # form: under a growth-aware estimator a full batch
                 # charges more than a size-1 one (with growth=0 this is
@@ -1150,6 +1362,9 @@ class ServingEngine:
         def reject(r: Request, now: float, eta: float, kind: str):
             d = deadline_of(r)
             derived.pop(id(r), None)      # r leaves the loop: drop its entry
+            seqs.pop(id(r), None)
+            self.admission_counts[kind] = \
+                self.admission_counts.get(kind, 0) + 1
             self.admission_log.append((now, r.model, eta, d, kind))
             out.append(Response(r.model, max(0.0, now - r.arrival_s),
                                 0.0, 0.0, 0, status="rejected",
@@ -1193,18 +1408,12 @@ class ServingEngine:
                     return
             q = pending[r.model]
             if sched == "slo":
-                # weighted-EDF queue order (stable: equal keys keep FIFO);
-                # with uniform priorities and one SLO this IS arrival
-                # order. Scan from the right by ITERATION — deque
-                # indexing is O(n) per access and would make this
-                # quadratic per admit under a deep backlog.
-                key = (vd_of(r), r.arrival_s)
-                i = len(q)
-                for r2 in reversed(q):
-                    if (vd_of(r2), r2.arrival_s) <= key:
-                        break
-                    i -= 1
-                q.insert(i, r)
+                # weighted-EDF queue order (stable: equal (vd, arrival)
+                # keys keep FIFO via the admit seq — with uniform
+                # priorities and one SLO this IS arrival order). The
+                # indexed insert replaces the old O(n) reverse scan +
+                # O(n) deque.insert, bit-for-bit order-preserving.
+                q.push(r)
             else:
                 q.append(r)
 
@@ -1326,6 +1535,7 @@ class ServingEngine:
                     if keep < len(group):
                         for r2 in reversed(group[keep:]):
                             q.appendleft(r2)
+                        self.deferred_joins += len(group) - keep
                         self.defer_log.append((now, name, keep,
                                                len(group) - keep))
                         group = group[:keep]
@@ -1343,6 +1553,7 @@ class ServingEngine:
                     if batch.deferred:
                         for r2 in reversed(batch.deferred):
                             q.appendleft(r2)
+                        self.deferred_joins += len(batch.deferred)
                         self.defer_log.append((now, name, batch.size,
                                                len(batch.deferred)))
                 else:
@@ -1457,6 +1668,7 @@ class ServingEngine:
                                 else [None] * batch.size):
                 d = deadline_of(req)
                 derived.pop(id(req), None)
+                seqs.pop(id(req), None)
                 out.append(Response(
                     name, finish - req.arrival_s, stats.init_s, stats.exec_s,
                     stats.peak_bytes, avg_bytes=stats.avg_bytes,
@@ -1478,6 +1690,11 @@ class ServingEngine:
             finish_replan(clock.now())
 
     # -- metrics -----------------------------------------------------------
+    # peak/avg memory, cache_hit_rate, and model_report are derived from
+    # the RETAINED entries of the ring-buffered timeline/stats_log (tests
+    # clear those logs and recompute over what follows) — on a replay
+    # longer than log_cap batches they describe the most recent window,
+    # not the lifetime. slo_report's counters are exact regardless.
     def peak_memory(self) -> int:
         return max((r for _, r, _ in self.timeline), default=0)
 
@@ -1507,8 +1724,10 @@ class ServingEngine:
             "rejection_rate": rejection_rate(responses),
             "priority_miss_rate": priority_miss_rate(responses),
             "per_priority": per_priority_stats(responses),
-            "preemptions": len(self.preempt_log),
-            "deferred_joins": sum(d for *_x, d in self.defer_log),
+            # exact streaming counters — NOT len() over the ring-buffered
+            # logs, which truncate at log_cap on trace-scale replays
+            "preemptions": self.preempt_log.total,
+            "deferred_joins": self.deferred_joins,
         }
 
     def model_report(self) -> Dict[str, ModelReport]:

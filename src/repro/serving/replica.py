@@ -39,6 +39,7 @@ import jax
 from repro.serving.clock import SimClock
 from repro.serving.engine import ServeSession, ServingEngine
 from repro.serving.stream import RequestStream
+from repro.serving.types import RingLog
 
 FAULT_KINDS = ("kill", "wedge", "slow", "recover")
 
@@ -134,8 +135,10 @@ class Replica:
         devs = jax.devices()
         self.device = devs[rid % len(devs)]
         # (finish_t, model, charged_s) per completed batch — the
-        # straggler detector's per-replica latency feed
-        self.batch_feed: List[Tuple[float, str, float]] = []
+        # straggler detector's per-replica latency feed. Ring-buffered
+        # (engine log_cap): the detector only reads the latest entries,
+        # and `.total` keeps the lifetime batch count exact at trace scale
+        self.batch_feed = RingLog(self.engine.log_cap)
 
     def register(self, name: str, model) -> "Replica":
         self.engine.register(name, model)
@@ -200,7 +203,7 @@ class Replica:
         return {
             "rid": self.rid, "dead": self.dead, "wedged": self.wedged,
             "slow_factor": self.clock.slow_factor, "load": self.load(),
-            "clock_s": self.clock.now(), "batches": len(self.batch_feed),
+            "clock_s": self.clock.now(), "batches": self.batch_feed.total,
             "free_budget": self.free_budget(),
             "restream_bytes": self.restream_bytes(),
         }

@@ -56,7 +56,7 @@ import numpy as np
 
 from repro.ft.resilience import StragglerDetector
 from repro.serving.replica import FaultPlan, Replica
-from repro.serving.types import (Request, Response, SLOConfig,
+from repro.serving.types import (Request, Response, RingLog, SLOConfig,
                                  deadline_miss_rate, rejection_rate)
 
 ROUTING_POLICIES = ("affinity", "round_robin")
@@ -193,7 +193,8 @@ class Router:
                  cooldown_s: float = 0.25,
                  health_interval_s: float = 0.1,
                  straggler: Optional[StragglerDetector] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 log_cap: int = 10000):
         if routing not in ROUTING_POLICIES:
             raise ValueError(f"unknown routing {routing!r}; "
                              f"expected one of {ROUTING_POLICIES}")
@@ -211,10 +212,11 @@ class Router:
             window=16, z_thresh=3.0, patience=2)
         self._rng = np.random.default_rng(seed)
         self._rr = 0
-        # observability
-        self.route_log: List[tuple] = []   # (t, req_id, model, rid, why, k)
-        self.health_log: List[tuple] = []  # (t, event, rid)
-        self.fault_log: List[tuple] = []   # (t, kind, rid)
+        # observability — ring-buffered (PR 8): dispatches are O(events)
+        # over a trace-scale replay; `.total` keeps lifetime counts exact
+        self.route_log = RingLog(log_cap)   # (t, req_id, model, rid, why, k)
+        self.health_log = RingLog(log_cap)  # (t, event, rid)
+        self.fault_log = RingLog(log_cap)   # (t, kind, rid)
         self.retries = 0
         self.failed = 0
         self.dup_suppressed = 0
@@ -451,7 +453,7 @@ class Router:
             "restream_bytes": sum(r.restream_bytes()
                                   for r in self.replicas),
             "per_replica": {r.rid: {
-                "batches": len(r.batch_feed),
+                "batches": r.batch_feed.total,
                 "restream_bytes": r.restream_bytes(),
                 "breaker": self.breakers[r.rid].state,
                 "breaker_transitions":

@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -34,6 +36,10 @@ class RequestStream:
     def __init__(self, requests: Sequence[Request] = (),
                  closed: bool = False):
         self._lock = threading.Lock()
+        # push/close signal: an event-driven consumer blocks here instead
+        # of polling every poll_interval_s (ServeSession.run step_mode=
+        # "event" on a real clock)
+        self._cond = threading.Condition(self._lock)
         self._seq = itertools.count()     # FIFO tie-break for equal arrivals
         self._heap: List[Tuple[float, int, Request]] = []
         self._closed = False
@@ -55,12 +61,14 @@ class RequestStream:
             if self._closed:
                 raise RuntimeError("push on closed RequestStream")
             heapq.heappush(self._heap, (req.arrival_s, next(self._seq), req))
+            self._cond.notify_all()
 
     def close(self):
         """Idempotent: closing an already-closed stream is a no-op (several
         producers may all signal end-of-trace)."""
         with self._lock:
             self._closed = True
+            self._cond.notify_all()
 
     @property
     def closed(self) -> bool:
@@ -92,10 +100,44 @@ class RequestStream:
         with self._lock:
             return len(self._heap)
 
+    def peek_next(self) -> Optional[Request]:
+        """The earliest pending request WITHOUT popping it, or None — the
+        heap top, O(1). The engine's speculative-prefetch fallback checks
+        this first and only falls back to ``peek_upcoming`` (O(n) over a
+        trace-scale heap) when the top can't be warmed."""
+        with self._lock:
+            return self._heap[0][2] if self._heap else None
+
     def peek_upcoming(self, n: int = 8) -> List[Request]:
         """Up to ``n`` earliest pending requests WITHOUT popping them."""
         with self._lock:
             return [r for _, _, r in heapq.nsmallest(n, self._heap)]
+
+    def wait_for_push(self, timeout: Optional[float] = None, *,
+                      before_s: float = math.inf) -> bool:
+        """Block (REAL time) until the stream closes or holds a pending
+        arrival stamped earlier than ``before_s``, or ``timeout`` seconds
+        pass. Returns True when woken by stream state, False on timeout.
+
+        This is the event-driven idle wait for live (open) streams on a
+        real clock: instead of spinning ``poll_interval_s`` ticks, the
+        serve loop parks here and a producer's ``push``/``close`` wakes
+        it immediately — one step per event. The check runs under the
+        stream lock, so a push that landed between the caller's last poll
+        and this wait is seen on entry, never missed."""
+        deadline = (time.monotonic() + timeout) if timeout is not None \
+            else None
+        with self._cond:
+            while True:
+                if self._closed or (self._heap
+                                    and self._heap[0][0] < before_s):
+                    return True
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._cond.wait(left):
+                        return False
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +171,20 @@ def poisson_trace(rates: Dict[str, float], duration_s: float, *,
     return reqs
 
 
+def stamp_req_ids(trace: Sequence[Request], *, start: int = 0
+                  ) -> List[Request]:
+    """Stamp a unique per-trace request index onto ``req_id`` (NEW
+    ``Request`` objects; tokens shared, not copied). The engine echoes
+    ``req_id`` on every ``Response``, so metrics and reference outputs
+    can be keyed by it — ``(model, arrival_s)`` keys silently collapse
+    two same-model requests with identical arrivals (the PR-8 bugfix).
+    Requests that already carry a ``req_id`` keep it; everything else
+    gets ``start + position``."""
+    from dataclasses import replace
+    return [r if r.req_id is not None else replace(r, req_id=start + i)
+            for i, r in enumerate(trace)]
+
+
 def assign_priorities(trace: Sequence[Request],
                       mix: Dict[float, float], *, seed: int = 0
                       ) -> List[Request]:
@@ -136,8 +192,10 @@ def assign_priorities(trace: Sequence[Request],
     weight -> probability (normalized). Returns NEW ``Request`` objects
     (same tokens / arrivals / deadlines — tokens shared, not copied) so
     the unstamped trace can be replayed as the uniform-priority baseline
-    while per-class metrics are still computed against this assignment
-    via ``(model, arrival_s)`` keys."""
+    while per-class metrics are still computed against this assignment.
+    Key the assignment by unique ``req_id`` (``stamp_req_ids``) — NOT by
+    ``(model, arrival_s)``, which overwrites silently when two same-model
+    requests share an arrival time."""
     from dataclasses import replace
     rng = np.random.default_rng(seed)
     levels = sorted(mix)

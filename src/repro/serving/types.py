@@ -27,10 +27,72 @@ from __future__ import annotations
 
 import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Iterator, Optional
 
 import numpy as np
+
+
+class RingLog:
+    """Bounded decision log: keeps the most recent ``cap`` entries plus an
+    exact lifetime ``total`` count, so observability memory is O(cap) in
+    trace length while streaming aggregates stay exact (PR 8).
+
+    Every engine/router decision log (``batch_log``, ``admission_log``,
+    ``kv_log``, ``route_log``, ...) is one of these. It quacks like the
+    list the logs used to be — iteration in append order, ``len`` of the
+    RETAINED entries, integer/slice indexing, equality against plain
+    lists — so scenario tests that replay short traces (< cap events)
+    see bit-identical contents. At trace scale the tail is truncated;
+    anything that must stay exact reads ``total`` or a dedicated counter
+    (``ServingEngine.slo_report`` does), never ``len``."""
+
+    __slots__ = ("_buf", "total")
+
+    def __init__(self, cap: int = 10000, items: Iterable = ()):
+        self._buf: deque = deque(items, maxlen=int(cap))
+        self.total: int = len(self._buf)
+
+    @property
+    def cap(self) -> int:
+        return self._buf.maxlen
+
+    def append(self, item):
+        self._buf.append(item)
+        self.total += 1
+
+    def clear(self):
+        """Drop retained entries AND reset ``total`` — the semantics of
+        ``list.clear`` on the old unbounded logs (tests clear a log and
+        recompute aggregates from what accumulates afterwards)."""
+        self._buf.clear()
+        self.total = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._buf)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._buf)[idx]
+        return self._buf[idx]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, RingLog):
+            return list(self._buf) == list(other._buf)
+        if isinstance(other, (list, tuple, deque)):
+            return list(self._buf) == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return (f"RingLog(cap={self._buf.maxlen}, total={self.total}, "
+                f"retained={list(self._buf)!r})")
 
 
 @dataclass

@@ -1,0 +1,107 @@
+"""serving/traces.py: the seeded trace-family generators and the Jain
+fairness index. Every generator must be deterministic under a seed,
+arrival-sorted, and windowed to [0, duration)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.traces import (TenantSpec, diurnal_trace,
+                                  flash_crowd_trace, jain_fairness,
+                                  multi_tenant_trace, session_trace)
+
+VOCAB, SEQ = 64, 8
+
+
+def _sorted_in_window(trace, duration):
+    ts = [r.arrival_s for r in trace]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < duration for t in ts)
+
+
+def test_diurnal_seeded_sorted_windowed():
+    kw = dict(period_s=10.0, depth=0.6, vocab=VOCAB, seq=SEQ, seed=3)
+    a = diurnal_trace({"m": 50.0}, 40.0, **kw)
+    b = diurnal_trace({"m": 50.0}, 40.0, **kw)
+    assert [(r.model, r.arrival_s) for r in a] \
+        == [(r.model, r.arrival_s) for r in b]
+    _sorted_in_window(a, 40.0)
+    # mean rate is preserved by thinning (sin integrates to ~0 over
+    # whole periods): 50 req/s * 40 s = 2000 expected
+    assert 1600 < len(a) < 2400
+    # peaks beat troughs: compare arrivals in the top vs bottom half of
+    # the sinusoid (phase 0: first half of each period is the high half)
+    high = sum(1 for r in a if (r.arrival_s % 10.0) < 5.0)
+    assert high > 0.6 * len(a)
+    with pytest.raises(ValueError):
+        diurnal_trace({"m": 1.0}, 1.0, period_s=1.0, depth=1.5,
+                      vocab=VOCAB, seq=SEQ)
+
+
+def test_flash_crowd_spikes_one_model():
+    base = {"a": 20.0, "b": 20.0}
+    tr = flash_crowd_trace(base, 30.0, crowd_model="a", start_s=10.0,
+                           span_s=3.0, factor=20.0, vocab=VOCAB,
+                           seq=SEQ, seed=4)
+    _sorted_in_window(tr, 30.0)
+    in_win = [r for r in tr if 10.0 <= r.arrival_s < 13.0
+              and r.model == "a"]
+    out_win = [r for r in tr if r.arrival_s < 10.0 and r.model == "a"]
+    in_rate, out_rate = len(in_win) / 3.0, len(out_win) / 10.0
+    assert in_rate > 8 * out_rate        # nominal x20, wide slack
+    # the other model is untouched (same background process either way)
+    b_rate = sum(1 for r in tr if r.model == "b") / 30.0
+    assert 10.0 < b_rate < 30.0
+    with pytest.raises(ValueError):
+        flash_crowd_trace(base, 30.0, crowd_model="zzz", start_s=1.0,
+                          span_s=1.0, vocab=VOCAB, seq=SEQ)
+
+
+def test_multi_tenant_deadlines_and_tenant_map():
+    tenants = {
+        "fast": TenantSpec(models=("a",), rate=40.0, slo_s=0.05,
+                           priority=2.0),
+        "slow": TenantSpec(models=("a", "b"), rate=40.0, slo_s=0.5),
+    }
+    trace, tenant_of = multi_tenant_trace(tenants, 5.0, vocab=VOCAB,
+                                          seq=SEQ, seed=5)
+    _sorted_in_window(trace, 5.0)
+    assert len(trace) > 100
+    assert sorted(r.req_id for r in trace) == list(range(len(trace)))
+    assert set(tenant_of.values()) == {"fast", "slow"}
+    for r in trace:
+        spec = tenants[tenant_of[r.req_id]]
+        assert r.model in spec.models
+        assert r.priority == spec.priority
+        assert r.deadline_s == pytest.approx(r.arrival_s + spec.slo_s)
+    with pytest.raises(ValueError):
+        TenantSpec(models=(), rate=1.0, slo_s=0.1)
+    with pytest.raises(ValueError):
+        TenantSpec(models=("a",), rate=1.0, slo_s=0.0)
+
+
+def test_session_trace_walks_consecutive_models():
+    names = ("a", "b", "c")
+    tr = session_trace(names, 5.0, 20.0, chain_len=3, think_s=0.1,
+                       vocab=VOCAB, seq=SEQ, seed=6)
+    _sorted_in_window(tr, 20.0)
+    # ~5 sessions/s * 20 s * 3 steps, minus truncated tails
+    assert 150 < len(tr) <= 400
+    # correlated chains force model switches: a multi-model mix must
+    # appear, not one dominant model
+    counts = {n: sum(1 for r in tr if r.model == n) for n in names}
+    assert all(v > 0.2 * len(tr) / len(names) for v in counts.values())
+    with pytest.raises(ValueError):
+        session_trace((), 1.0, 1.0, vocab=VOCAB, seq=SEQ)
+
+
+def test_jain_fairness_index():
+    assert jain_fairness([]) == 1.0
+    assert jain_fairness([0.0, 0.0]) == 1.0
+    assert jain_fairness([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_fairness([1.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+    mixed = jain_fairness([1.0, 0.5, 0.25])
+    assert 1 / 3 < mixed < 1.0
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0.1, 1.0, 16)
+    assert 1 / 16 <= jain_fairness(xs) <= 1.0 + 1e-12
