@@ -13,6 +13,7 @@ Mapping to the paper (DESIGN.md §7):
     §4.4 mix    -> mix_shift (joint vs uniform budget split; re-planning)
     §4.4 fleet  -> replica_fleet (affinity vs round-robin; breaker A/B)
     §4.4 kv     -> kv_budget (weights-only vs unified weights+KV+arena pool)
+    §4.4 cost   -> learned_cost (RLS calibration vs EWMA; proactive replan)
     Fig 8    -> tradeoff            Fig 9   -> naive_overlap
     §Roofline-> roofline_report     kernels -> kernels_bench
 """
@@ -35,6 +36,7 @@ SUITES = [
     "replica_fleet",
     "kv_budget",
     "trace_scale",
+    "learned_cost",
     "ablation",
     "tradeoff",
     "naive_overlap",

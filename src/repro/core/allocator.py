@@ -177,16 +177,34 @@ class PlanCostEvaluator:
     of the plan the production shrink loop emits at that cap — the
     allocator and the serving engine therefore price budget in the same
     currency. Memoization matters: water-filling re-visits neighbouring
-    caps constantly and brute mode shares caps across splits."""
+    caps constantly and brute mode shares caps across splits.
+
+    ``calibration`` substitutes the FITTED latency curve for the pure
+    analytic one: a per-model multiplicative correction (observed /
+    analytic latency, from ``OnlineLatencyModel.calibration_scales``)
+    applied on top of ``simulate``. The analytic curve keeps its shape
+    over caps (that is what the simulator knows); the learned factor
+    re-anchors its level to what the serving clock actually charged on
+    this machine, so models the analytic model underprices pull
+    correspondingly more budget. Models absent from the dict price
+    purely analytically — an empty/None dict is bit-for-bit the
+    uncalibrated evaluator."""
 
     def __init__(self, graphs, chunk_bytes: int, hw=None, solver_cfg=None,
-                 max_rounds: int = 4):
+                 max_rounds: int = 4,
+                 calibration: Optional[Dict[str, float]] = None):
         from repro.core.capacity import HWSpec
         self.graphs = graphs
         self.chunk_bytes = int(chunk_bytes)
         self.hw = hw or HWSpec()
         self.solver_cfg = solver_cfg
         self.max_rounds = max_rounds
+        self.calibration = dict(calibration or {})
+        for m, s in self.calibration.items():
+            if not (s > 0.0 and math.isfinite(s)):
+                raise ValueError(
+                    f"calibration scale for {m!r} must be finite and > 0, "
+                    f"got {s!r}")
         self._cache: Dict[Tuple[str, int], Tuple[float, int, object]] = {}
         self.evals = 0
 
@@ -200,7 +218,8 @@ class PlanCostEvaluator:
         g = self.graphs[name]
         peak, plan = _plan_one(g, self.chunk_bytes, cap, self.hw,
                                self.solver_cfg, self.max_rounds)
-        lat = simulate(plan, g, self.hw).integrated_s
+        lat = simulate(plan, g, self.hw).integrated_s \
+            * self.calibration.get(name, 1.0)
         self.evals += 1
         out = (lat, peak, plan)
         self._cache[(name, cap)] = out
@@ -251,7 +270,8 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
                    mix: MixSpec, hw=None, solver_cfg=None,
                    quantum: Optional[int] = None, mode: str = "auto",
                    evaluator: Optional[PlanCostEvaluator] = None,
-                   reserves: Optional[Dict[str, ReservationSpec]] = None
+                   reserves: Optional[Dict[str, ReservationSpec]] = None,
+                   calibration: Optional[Dict[str, float]] = None
                    ) -> AllocationResult:
     """Search the per-model budget split jointly under the request mix.
 
@@ -274,10 +294,18 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
     the weights-only search below runs untouched, bit-for-bit. Reserved
     mode is water-fill only (``mode="brute"`` raises: enumerating the
     joint weight x KV grid explodes and the brute oracle prices weights
-    only)."""
+    only).
+
+    ``calibration`` (``{model: observed/analytic latency scale}``, see
+    ``PlanCostEvaluator``) prices caps with the FITTED latency curve
+    instead of the pure analytic one. Mutually exclusive with passing a
+    pre-built ``evaluator`` (whose own calibration would silently win)."""
     if mode not in ALLOC_MODES:
         raise ValueError(f"unknown allocation mode {mode!r}; "
                          f"expected one of {ALLOC_MODES}")
+    if calibration and evaluator is not None:
+        raise ValueError("allocate_joint: pass calibration either inline or "
+                         "via the evaluator, not both")
     names = list(graphs)
     if sum(mix.weight(n) for n in names) <= 0:
         # a mix that names none of the graphs (typo'd keys) would silently
@@ -293,7 +321,7 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
                              "'auto' with reserves")
         return _allocate_reserved(graphs, chunk_bytes, budget_bytes, mix,
                                   hw, solver_cfg, quantum, evaluator,
-                                  reserves)
+                                  reserves, calibration=calibration)
     floors = {n: min(model_floor(graphs[n], chunk_bytes), budget_bytes)
               for n in names}
     spare = budget_bytes - sum(floors.values())
@@ -309,7 +337,8 @@ def allocate_joint(graphs, chunk_bytes: int, budget_bytes: int,
     quantum = max(1, int(quantum))
     steps = spare // quantum
     ev = evaluator or PlanCostEvaluator(graphs, chunk_bytes, hw=hw,
-                                        solver_cfg=solver_cfg)
+                                        solver_cfg=solver_cfg,
+                                        calibration=calibration)
 
     n_splits = math.comb(steps + len(names), len(names))
     if mode == "auto":
@@ -379,7 +408,8 @@ def _allocate_reserved(graphs, chunk_bytes: int, budget_bytes: int,
                        mix: MixSpec, hw, solver_cfg,
                        quantum: Optional[int],
                        evaluator: Optional[PlanCostEvaluator],
-                       reserves: Dict[str, ReservationSpec]
+                       reserves: Dict[str, ReservationSpec],
+                       calibration: Optional[Dict[str, float]] = None
                        ) -> AllocationResult:
     """The unified water-fill: weights vs KV vs activations in one pass.
 
@@ -418,7 +448,8 @@ def _allocate_reserved(graphs, chunk_bytes: int, budget_bytes: int,
         quantum = max(chunk, (spare // 16 // chunk) * chunk or chunk)
     quantum = max(1, int(quantum))
     ev = evaluator or PlanCostEvaluator(graphs, chunk_bytes, hw=hw,
-                                        solver_cfg=solver_cfg)
+                                        solver_cfg=solver_cfg,
+                                        calibration=calibration)
     split = dict(floors)
     kv_seqs = {n: 0 for n in names}
     avail = spare

@@ -226,7 +226,10 @@ class BatchLatencyEstimator:
         self.observations: Dict[str, int] = {}
 
     def _factor(self, batch_size: int) -> float:
-        return 1.0 + self.growth * max(0, int(batch_size) - 1)
+        b = int(batch_size)
+        if b < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        return 1.0 + self.growth * (b - 1)
 
     def observe(self, model: str, dt_s: float, batch_size: int = 1):
         dt_s = float(dt_s) / self._factor(batch_size)
@@ -238,3 +241,194 @@ class BatchLatencyEstimator:
 
     def estimate(self, model: str, batch_size: int = 1) -> float:
         return self._est.get(model, self.prior_s) * self._factor(batch_size)
+
+
+# ---------------------------------------------------------------------------
+# online RLS calibration — learned latency curves per model
+# ---------------------------------------------------------------------------
+
+#: feature vector layout for the per-model RLS fit (see OnlineLatencyModel):
+#: [intercept, extra rows beyond 1, cold bytes to restream / COLD_SCALE,
+#:  decode tokens / DECODE_SCALE]
+N_FEATURES = 4
+COLD_SCALE = float(1 << 30)     # bytes -> GiB keeps the normal matrix sane
+DECODE_SCALE = 1024.0           # tokens -> ktokens, same reason
+
+
+class OnlineLatencyModel(BatchLatencyEstimator):
+    """Per-model regularized recursive-least-squares latency fit.
+
+    The EWMA parent prices every batch with two hand-set knobs (the prior
+    and ``growth``); this subclass *learns* the curve online from what the
+    serving clock actually charged. Each executed batch contributes one
+    sample ``features(batch_size, cold_bytes, decode_tokens) -> charged_s``
+    and the fit is the exact ridge solution
+
+        argmin_theta  sum_i (y_i - x_i . theta)^2 + lam * ||theta - theta0||^2
+
+    computed recursively (standard RLS, no forgetting factor — so the fit
+    is independent of sample order and matches the closed-form
+    ``numpy.linalg.lstsq`` solution of the augmented system to fp
+    precision). ``theta0`` warm-starts from the analytic prior at the
+    first sample: base = the current per-model prior estimate, per-row
+    slope = ``growth * base``, restream and decode slopes 0.
+
+    Dormant-by-default contract: until ``min_samples`` observations land
+    for a model, ``estimate()`` defers to the EWMA parent **bit-for-bit**
+    (the RLS runs silently alongside). Pass ``min_samples=math.inf`` to
+    keep the learned path permanently dormant — every schedule is then
+    identical to ``BatchLatencyEstimator``. Once calibrated,
+    ``estimate(m, b)`` prices a batch at the fitted curve evaluated at the
+    model's running-mean cold/decode features (the scheduler call sites
+    don't know them per-batch), and ``predict()`` exposes the full
+    feature-resolved prediction for feasibility checks.
+
+    Calibration quality is tracked prequentially: each sample is first
+    predicted with the *current* state (EWMA or fit — whatever the
+    scheduler would have used), then absorbed. ``calibration_report()``
+    therefore measures real scheduling error, and its ``drift`` field (an
+    EWMA of recent relative error) rises again if the machine moves away
+    from the fit — the signal ``slo_report()`` surfaces.
+    """
+
+    def __init__(self, prior_s: float = 0.05, alpha: float = 0.5,
+                 priors: Optional[Dict[str, float]] = None,
+                 growth: float = 0.0, min_samples: float = 8,
+                 ridge_lambda: float = 1e-3, drift_alpha: float = 0.25):
+        super().__init__(prior_s, alpha, priors, growth)
+        assert min_samples >= 1, min_samples
+        assert ridge_lambda > 0.0, ridge_lambda
+        assert 0.0 < drift_alpha <= 1.0, drift_alpha
+        self.min_samples = min_samples
+        self.ridge_lambda = float(ridge_lambda)
+        self.drift_alpha = float(drift_alpha)
+        self._theta: Dict[str, np.ndarray] = {}
+        self._theta0: Dict[str, np.ndarray] = {}
+        self._P: Dict[str, np.ndarray] = {}
+        self._nsamp: Dict[str, int] = {}
+        self._feat_sum: Dict[str, np.ndarray] = {}
+        self._abs_err_sum: Dict[str, float] = {}
+        self._rel_err_sum: Dict[str, float] = {}
+        self._drift: Dict[str, float] = {}
+
+    # -- features ----------------------------------------------------------
+
+    @staticmethod
+    def features_of(batch_size: int, cold_bytes: int = 0,
+                    decode_tokens: int = 0) -> np.ndarray:
+        b = int(batch_size)
+        if b < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        return np.array([1.0, float(b - 1),
+                         float(max(0, cold_bytes)) / COLD_SCALE,
+                         float(max(0, decode_tokens)) / DECODE_SCALE])
+
+    def _init_model(self, model: str):
+        base = self._est.get(model, self.prior_s)
+        self._theta0[model] = np.array([base, self.growth * base, 0.0, 0.0])
+        self._theta[model] = self._theta0[model].copy()
+        self._P[model] = np.eye(N_FEATURES) / self.ridge_lambda
+        self._nsamp[model] = 0
+        self._feat_sum[model] = np.zeros(N_FEATURES)
+        self._abs_err_sum[model] = 0.0
+        self._rel_err_sum[model] = 0.0
+
+    # -- observation -------------------------------------------------------
+
+    def observe_sample(self, model: str, charged_s: float,
+                       batch_size: int = 1, cold_bytes: int = 0,
+                       decode_tokens: int = 0):
+        """Absorb one executed batch: RLS update + the parent EWMA (which
+        stays the fallback until calibration). Prequential error is scored
+        against whatever ``estimate`` would have priced this batch at."""
+        x = self.features_of(batch_size, cold_bytes, decode_tokens)
+        y = float(charged_s)
+        if model not in self._theta:
+            self._init_model(model)
+        err = y - self.estimate(model, batch_size)
+        self._abs_err_sum[model] += abs(err)
+        rel = abs(err) / max(y, 1e-12)
+        self._rel_err_sum[model] += rel
+        self._drift[model] = (rel if model not in self._drift else
+                              self._drift[model] + self.drift_alpha *
+                              (rel - self._drift[model]))
+        P = self._P[model]
+        Px = P @ x
+        k = Px / (1.0 + float(x @ Px))
+        self._theta[model] = self._theta[model] + k * (y - float(
+            x @ self._theta[model]))
+        self._P[model] = P - np.outer(k, Px)
+        self._nsamp[model] += 1
+        self._feat_sum[model] = self._feat_sum[model] + x
+        super().observe(model, charged_s, batch_size)
+
+    # -- queries -----------------------------------------------------------
+
+    def calibrated(self, model: str) -> bool:
+        return self._nsamp.get(model, 0) >= self.min_samples
+
+    def _mean_features(self, model: str) -> np.ndarray:
+        n = max(1, self._nsamp.get(model, 0))
+        return self._feat_sum[model] / n
+
+    def predict(self, model: str, batch_size: int = 1, cold_bytes: int = 0,
+                decode_tokens: int = 0) -> float:
+        """Feature-resolved prediction; falls back to ``estimate`` (which
+        ignores cold/decode) while uncalibrated."""
+        if not self.calibrated(model):
+            return self.estimate(model, batch_size)
+        x = self.features_of(batch_size, cold_bytes, decode_tokens)
+        return max(1e-9, float(x @ self._theta[model]))
+
+    def estimate(self, model: str, batch_size: int = 1) -> float:
+        if not self.calibrated(model):
+            return super().estimate(model, batch_size)
+        x = self.features_of(batch_size)
+        mean = self._mean_features(model)
+        x[2], x[3] = mean[2], mean[3]   # typical cold/decode load
+        return max(1e-9, float(x @ self._theta[model]))
+
+    def coefficients(self, model: str) -> Optional[Dict[str, float]]:
+        """Fitted curve in engineering units, or None before any sample."""
+        th = self._theta.get(model)
+        if th is None:
+            return None
+        base = float(th[0])
+        return {"base_s": base,
+                "per_row_s": float(th[1]),
+                "growth": float(th[1] / base) if abs(base) > 1e-12 else 0.0,
+                "s_per_cold_byte": float(th[2]) / COLD_SCALE,
+                "s_per_decode_token": float(th[3]) / DECODE_SCALE}
+
+    def calibration_report(self) -> Dict[str, dict]:
+        """Per-model fit quality for ``slo_report()``: sample count,
+        whether the fitted curve is live, lifetime mean absolute /
+        relative prequential error, and ``drift`` (EWMA of recent
+        relative error — rises when the machine leaves the fit)."""
+        out: Dict[str, dict] = {}
+        for m, n in self._nsamp.items():
+            coef = self.coefficients(m)
+            out[m] = {
+                "samples": int(n),
+                "calibrated": self.calibrated(m),
+                "mae_s": self._abs_err_sum[m] / max(1, n),
+                "rel_err": self._rel_err_sum[m] / max(1, n),
+                "drift": self._drift.get(m, 0.0),
+                "coef": coef,
+            }
+        return out
+
+    def calibration_scales(self, analytic_s: Dict[str, float],
+                           clip: float = 16.0) -> Dict[str, float]:
+        """Observed-over-analytic latency ratio per calibrated model — the
+        fitted correction ``allocate_joint(calibration=...)`` applies to
+        the analytic latency-per-byte curve. Models still dormant (or with
+        a degenerate analytic estimate) are omitted, so the allocator
+        prices them purely analytically."""
+        out: Dict[str, float] = {}
+        for m, lat in analytic_s.items():
+            if not self.calibrated(m) or not lat or lat <= 0.0:
+                continue
+            scale = self.estimate(m, 1) / float(lat)
+            out[m] = float(min(clip, max(1.0 / clip, scale)))
+        return out

@@ -378,7 +378,7 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
                      budget_bytes: int, hw: Optional[HWSpec] = None,
                      solver_cfg=None, max_rounds: int = 4,
                      mix=None, alloc_mode: str = "auto",
-                     reserves=None) -> MultiModelPlan:
+                     reserves=None, calibration=None) -> MultiModelPlan:
     """Solve one OverlapPlan per model such that every model's execution
     peak (preload + streamed residency) fits the shared device budget.
 
@@ -398,7 +398,13 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
     weight quanta, and ``meta`` gains ``kv_seqs`` / ``kv_split`` /
     ``arena`` / ``reserved_bytes`` (the total the engine must keep clear
     of weight prefetch — see ``prefetch_budget``). Reserves imply a mix
-    (uniform when none is given: the unified pass needs weights)."""
+    (uniform when none is given: the unified pass needs weights).
+
+    ``calibration`` (``{model: observed/analytic latency scale}``) makes
+    the allocator price caps with the FITTED latency curve — the learned
+    correction from ``OnlineLatencyModel.calibration_scales`` — instead
+    of the raw analytic simulator; recorded in ``meta["calibration"]``
+    for provenance. Only meaningful with ``mix``."""
     hw = hw or HWSpec()
     mm = MultiModelPlan(budget_bytes=int(budget_bytes),
                         meta={"chunk_bytes": chunk_bytes})
@@ -415,7 +421,8 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
         try:
             alloc = allocate_joint(graphs, chunk_bytes, budget_bytes, mix,
                                    hw=hw, solver_cfg=solver_cfg,
-                                   mode=alloc_mode, reserves=reserves)
+                                   mode=alloc_mode, reserves=reserves,
+                                   calibration=calibration)
         except BudgetInfeasibleError as e:
             # no partition exists (per-model floors exceed the budget):
             # fall back to the uniform full-budget caps — serialized
@@ -428,6 +435,8 @@ def plan_multi_model(graphs: Dict[str, ModelGraph], chunk_bytes: int,
                             "alloc_mode": alloc.mode,
                             "alloc_cost_s": alloc.cost,
                             "alloc_evals": alloc.evals})
+            if calibration:
+                mm.meta["calibration"] = dict(calibration)
             if reserves:
                 reserved_of = {n: alloc.arena.get(n, 0)
                                + alloc.kv_split.get(n, 0) for n in graphs}

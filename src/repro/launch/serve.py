@@ -128,6 +128,17 @@ def main(argv=None):
     ap.add_argument("--replan-drift", type=float, default=0.3,
                     help="total-variation drift threshold that triggers "
                     "an online re-plan (with --replan)")
+    ap.add_argument("--cost-model", choices=["ewma", "learned"],
+                    default="ewma",
+                    help="online: batch-latency cost model. ewma = "
+                    "per-model EWMA with a fixed batch-growth factor; "
+                    "learned = online RLS fit over (batch size, cold "
+                    "bytes, decode tokens) that takes over from the EWMA "
+                    "once calibrated and feeds admission, the batch cap, "
+                    "allocation, and proactive re-planning")
+    ap.add_argument("--min-samples", type=int, default=8,
+                    help="learned cost model: observed batches per model "
+                    "before the RLS fit replaces the EWMA estimate")
     ap.add_argument("--kv-page-kb", type=int, default=0,
                     help="unified budget: paged-KV page size (KB); > 0 "
                     "adds every active sequence's KV cache to the shared "
@@ -283,6 +294,10 @@ def main(argv=None):
                       f"restream_mb={st['restream_bytes'] / 1e6:.1f} "
                       f"breaker={st['breaker']}")
             return responses, router
+        cost_model = None
+        if args.cost_model == "learned":
+            from repro.core.latency_model import OnlineLatencyModel
+            cost_model = OnlineLatencyModel(min_samples=args.min_samples)
         responses = engine.serve(
             RequestStream.from_trace(trace), clock=clock,
             scheduler=args.scheduler, slo=slo,
@@ -290,6 +305,7 @@ def main(argv=None):
                                   max_wait_s=args.max_wait_ms / 1e3),
             batch_cap=(None if args.batch_cap == "auto"
                        else args.batch_cap == "on"),
+            cost_model=cost_model,
             replan=args.replan, replan_drift=args.replan_drift)
         for r in responses:
             if r.status == "rejected":
@@ -341,6 +357,16 @@ def main(argv=None):
         print(line)
         for d in detail:
             print(d)
+        if cost_model is not None:
+            for nm, st in cost_model.calibration_report().items():
+                coef = st["coef"]
+                print(f"  calib {nm}: samples={st['samples']} "
+                      f"calibrated={st['calibrated']} "
+                      f"mae={st['mae_s'] * 1e3:.2f}ms "
+                      f"rel_err={st['rel_err']:.3f} "
+                      f"drift={st['drift']:.3f} "
+                      f"base={coef['base_s'] * 1e3:.2f}ms "
+                      f"growth={coef['growth']:.3f}")
         return responses, engine
 
     keys = list(engine.models)

@@ -107,7 +107,8 @@ import numpy as np
 from repro.core.allocator import MixSpec, MixTracker, ReservationSpec
 from repro.core.arena import arena_size
 from repro.core.capacity import HWSpec, capacities
-from repro.core.latency_model import BatchLatencyEstimator
+from repro.core.latency_model import (BatchLatencyEstimator,
+                                      OnlineLatencyModel)
 from repro.core.opg import OPGProblem
 from repro.core.plan import MultiModelPlan, OverlapPlan, plan_multi_model
 from repro.core.solver import SolverConfig, solve
@@ -269,6 +270,14 @@ class _RunningBatch:
     # unified-budget accounting: decode tokens already charged to the KV
     # pool per member sequence (None until the batch starts / non-unified)
     kv_done: Optional[Dict] = None
+    # cost-model sample features, captured once when the batch first
+    # starts: what the scheduler priced this batch at, bytes the pool had
+    # to restream for it, and the members' total planned decode length —
+    # fed to OnlineLatencyModel.observe_sample at completion and stamped
+    # onto the batch's Responses
+    predicted_s: float = 0.0
+    cold_bytes: int = 0
+    decode_tokens: int = 0
 
     def remaining_s(self, cost: BatchLatencyEstimator) -> float:
         if self.state is None:
@@ -532,6 +541,7 @@ class ServingEngine:
         self._kv_tok_bytes: Dict[str, int] = {}
         self._arena_need: Dict[str, int] = {}
         self._model_bytes_total: Dict[str, int] = {}
+        self._plan_latency_cache: Dict[str, float] = {}
         self._executors: Dict[str, object] = {}
         self._protected: Dict[str, List[tuple]] = {}
         self._planned = False
@@ -614,6 +624,7 @@ class ServingEngine:
                 solver_cfg=self.solver_cfg, mix=self.mix,
                 alloc_mode=self.alloc_mode, reserves=self._build_reserves())
             self.plans = dict(self.multi_plan.plans)
+        self._plan_latency_cache.clear()
         self._planned = True
 
     def _executor(self, name: str):
@@ -661,6 +672,24 @@ class ServingEngine:
             return order.index(name)
         return (order.index(name) - order.index(last) - 1) % len(order)
 
+    def _weights_total_bytes(self, name: str) -> int:
+        """Total host-weight bytes of one model (memoized)."""
+        total = self._model_bytes_total.get(name)
+        if total is None:
+            total = sum(a.nbytes
+                        for a in self.models[name].host_weights.values())
+            self._model_bytes_total[name] = total
+        return total
+
+    def _cold_bytes(self, name: str) -> int:
+        """Bytes of `name`'s weights NOT resident in the shared pool right
+        now — what the next batch must restream, and the cold-bytes
+        feature an ``OnlineLatencyModel`` cost model fits."""
+        if self.cache is None:
+            return 0
+        return max(0, self._weights_total_bytes(name)
+                   - self.cache.model_bytes(name))
+
     def _restream_cost_s(self, name: str) -> float:
         """Seconds of storage streaming `name` needs before it can execute
         at full speed: bytes of its weights NOT resident in the shared pool
@@ -670,12 +699,7 @@ class ServingEngine:
         (Demand Layering's deadline-aware pipelined loading)."""
         if self.cache is None or self.disk_bw <= 0:
             return 0.0
-        total = self._model_bytes_total.get(name)
-        if total is None:
-            total = sum(a.nbytes
-                        for a in self.models[name].host_weights.values())
-            self._model_bytes_total[name] = total
-        return max(0, total - self.cache.model_bytes(name)) / self.disk_bw
+        return self._cold_bytes(name) / self.disk_bw
 
     def _pick_next_model(self, pending: Dict[str, Deque[Request]],
                          last: Optional[str],
@@ -1001,20 +1025,79 @@ class ServingEngine:
         return out
 
     # -- online re-planning (serve(replan=True)) ---------------------------
-    def _replan_worker(self, mix: MixSpec, slot: dict):
+    def _replan_worker(self, mix: MixSpec, slot: dict,
+                       calibration: Optional[Dict[str, float]] = None):
         """Background thread body: compute a fresh MultiModelPlan for the
         observed mix. The result lands in ``slot`` and the serving loop
-        swaps it in at a batch boundary — planning never blocks serving."""
+        swaps it in at a batch boundary — planning never blocks serving.
+        ``calibration`` (per-model observed/analytic latency scales from
+        a calibrated ``OnlineLatencyModel``) makes the allocator price
+        caps with the fitted curves instead of the raw simulator."""
         try:
             slot["plan"] = plan_multi_model(
                 {n: m.graph for n, m in self.models.items()},
                 self.chunk_bytes, self.budget_bytes, hw=self.hw,
                 solver_cfg=self.solver_cfg, mix=mix,
-                alloc_mode=self.alloc_mode, reserves=self._build_reserves())
+                alloc_mode=self.alloc_mode, reserves=self._build_reserves(),
+                calibration=calibration)
         except Exception as e:  # noqa: BLE001 — surfaced via replan_log,
             slot["error"] = e  # a planner bug must not strand the queue
 
-    def _swap_plan(self, new_mm: MultiModelPlan, now: float, mix: MixSpec):
+    def _analytic_latency_s(self, name: str) -> float:
+        """Analytic per-visit latency of the model's CURRENTLY INSTALLED
+        plan (memoized per swap) — the denominator of the learned
+        observed/analytic calibration scale."""
+        lat = self._plan_latency_cache.get(name)
+        if lat is None:
+            plan = self.plans.get(name)
+            if plan is None:
+                return 0.0
+            from repro.core.plan import simulate
+            lat = simulate(plan, self.models[name].graph,
+                           self.hw).integrated_s
+            self._plan_latency_cache[name] = lat
+        return lat
+
+    def _calibration_scales(self, cost) -> Optional[Dict[str, float]]:
+        """Fitted latency corrections for the allocator, or None when the
+        cost model is not a calibrated OnlineLatencyModel (the analytic
+        path then runs untouched — the dormancy contract)."""
+        if not isinstance(cost, OnlineLatencyModel):
+            return None
+        scales = cost.calibration_scales(
+            {n: self._analytic_latency_s(n) for n in self.models})
+        return scales or None
+
+    def _predict_infeasible(self, cost, slo: Optional[SLOConfig],
+                            mix: MixSpec) -> Dict[str, dict]:
+        """The proactive re-plan predicate: for every model carrying
+        observed traffic, evaluate the FITTED latency curve at the current
+        split's cap (a visit restreams at least ``total - cap`` bytes
+        when the model is held to its cap) and flag models whose
+        predicted per-visit seconds exceed their SLO — the current split
+        cannot meet the observed mix's deadlines. Empty until the cost
+        model calibrates, so the default path never fires."""
+        if slo is None or not isinstance(cost, OnlineLatencyModel):
+            return {}
+        split = dict(self.multi_plan.meta.get("split", {})) \
+            if self.multi_plan is not None else {}
+        flagged: Dict[str, dict] = {}
+        for n in self.models:
+            if mix.weight(n) <= 0 or not cost.calibrated(n):
+                continue
+            limit = slo.slo_for(n)
+            if not math.isfinite(limit):
+                continue
+            cap = int(split.get(n, self.budget_bytes))
+            cold = max(0, self._weights_total_bytes(n) - cap)
+            pred = cost.predict(n, 1, cold_bytes=cold)
+            if pred > limit + 1e-9:
+                flagged[n] = {"predicted_s": pred, "slo_s": limit,
+                              "cap_bytes": cap, "cold_bytes": cold}
+        return flagged
+
+    def _swap_plan(self, new_mm: MultiModelPlan, now: float, mix: MixSpec,
+                   proactive: bool = False):
         """Install a re-planned MultiModelPlan at a batch boundary.
 
         The shared pool is deliberately left untouched: every resident
@@ -1022,7 +1105,14 @@ class ServingEngine:
         (cache keys are (model, weight, chunk) — plan-independent), so
         the swap reuses them instead of forcing evictions. The ledger
         snapshots taken around the swap prove it moved zero bytes; the
-        mix-drift scenario test asserts on exactly this log entry."""
+        mix-drift scenario test asserts on exactly this log entry.
+
+        ``proactive=True`` (a feasibility-triggered re-plan) additionally
+        SHRINKS models whose new cap is below their current residency:
+        their unpinned over-cap bytes are evicted now, ahead of the
+        predicted miss, so the favored model's prefetch finds room
+        immediately instead of evicting one chunk at a time mid-stream.
+        The freed bytes are recorded in the swap's log entry."""
         cache = self.cache
         before = cache.stats_snapshot() if cache is not None else None
         resident = cache.keys() if cache is not None else []
@@ -1032,12 +1122,20 @@ class ServingEngine:
         self.multi_plan = new_mm
         self.plans = dict(new_mm.plans)
         self._executors.clear()          # executors bind plans at build time
+        self._plan_latency_cache.clear()  # calibration denominators rebind
+        shrunk = 0
+        if proactive and cache is not None:
+            split = new_mm.meta.get("split", {})
+            for n, cap in split.items():
+                if cache.model_bytes(n) > int(cap):
+                    shrunk += cache.evict_model_to(n, int(cap))
         after = cache.stats_snapshot() if cache is not None else None
         still_resident = cache is not None and \
             all(cache.contains(k) for k in wanted)
         self.replan_log.append({
             "t": now, "event": "swap", "mix": mix.as_dict(),
             "split": dict(new_mm.meta.get("split", {})),
+            "proactive": proactive, "shrunk_bytes": shrunk,
             "reused_keys": len(wanted),
             "reused_bytes": sum(cache.model_bytes(n) for n in new_mm.plans)
             if cache is not None else 0,
@@ -1097,7 +1195,8 @@ class ServingEngine:
               replan_drift: float = 0.3,
               replan_min_observed: int = 8,
               mix_halflife_s: float = 0.5,
-              replan_background: bool = True
+              replan_background: bool = True,
+              replan_feasibility: bool = True
               ) -> List[Response]:
         """Continuous arrival-aware loop: serve a live ``RequestStream``
         until it is closed and drained. Same-model arrivals inside the
@@ -1178,7 +1277,20 @@ class ServingEngine:
         schedule-deterministic artifacts). A re-plan that fails is logged
         (``event="failed"``) and disables re-planning for the rest of the
         call — a persistent planner error must not retrigger every loop
-        iteration."""
+        iteration.
+
+        ``replan_feasibility`` (on by default, but inert unless
+        ``cost_model`` is a CALIBRATED ``OnlineLatencyModel``) adds the
+        PROACTIVE trigger: when the fitted latency curve evaluated at the
+        current split's caps predicts some observed-traffic model cannot
+        meet its SLO per visit, the re-plan fires immediately
+        (``event="feasibility"`` in ``replan_log``) — before the
+        predicted-infeasible batch boundary, not at the miss — the
+        allocator prices the new split with the fitted curves
+        (``calibration=``), and the swap proactively shrinks/evicts
+        over-cap models so the favored model finds room at once. Each
+        distinct split triggers at most once — a split the re-planner
+        cannot improve must not retrigger every iteration."""
         return self.serve_session(
             stream, clock=clock, batcher=batcher, scheduler=scheduler,
             poll_interval_s=poll_interval_s, step_mode=step_mode,
@@ -1187,7 +1299,8 @@ class ServingEngine:
             cost_model=cost_model, replan=replan, replan_drift=replan_drift,
             replan_min_observed=replan_min_observed,
             mix_halflife_s=mix_halflife_s,
-            replan_background=replan_background).run()
+            replan_background=replan_background,
+            replan_feasibility=replan_feasibility).run()
 
     def serve_session(self, stream: RequestStream, *, clock=None,
                       scheduler: str = "arrival",
@@ -1224,7 +1337,8 @@ class ServingEngine:
                     replan_drift: float = 0.3,
                     replan_min_observed: int = 8,
                     mix_halflife_s: float = 0.5,
-                    replan_background: bool = True):
+                    replan_background: bool = True,
+                    replan_feasibility: bool = True):
         """Generator body of the online loop (see ``serve`` for the full
         contract). Yields control at every point the loop would otherwise
         block or complete work — WITHOUT sleeping; the driver owns time:
@@ -1257,6 +1371,11 @@ class ServingEngine:
         self.mix_tracker = tracker
         replan_thread: Optional[threading.Thread] = None
         replan_slot: Optional[dict] = None
+        # proactive-trigger latch: each distinct installed split fires the
+        # feasibility re-plan at most once — when the allocator cannot
+        # improve a split the fitted model dislikes, retriggering every
+        # iteration would spin the planner forever
+        feas_tried: set = set()
         # queue + response state lives ON the session so a fleet driver
         # can observe load / collect responses between steps; ses.suspended
         # is the single preemption slot
@@ -1430,8 +1549,29 @@ class ServingEngine:
                                         "error": repr(err)})
                 can_replan = False
             else:
-                self._swap_plan(replan_slot["plan"], now, replan_slot["mix"])
+                self._swap_plan(replan_slot["plan"], now, replan_slot["mix"],
+                                proactive=replan_slot.get("proactive",
+                                                          False))
             replan_thread, replan_slot = None, None
+
+        def split_signature() -> tuple:
+            split = self.multi_plan.meta.get("split", {}) \
+                if self.multi_plan is not None else {}
+            return tuple(sorted((n, int(c)) for n, c in split.items()))
+
+        def start_replan(now: float, mix_now: MixSpec, proactive: bool):
+            nonlocal replan_thread, replan_slot
+            calibration = self._calibration_scales(cost)
+            replan_slot = {"mix": mix_now, "proactive": proactive}
+            replan_thread = threading.Thread(
+                target=self._replan_worker,
+                args=(mix_now, replan_slot),
+                kwargs={"calibration": calibration}, daemon=True)
+            replan_thread.start()
+            if not replan_background:
+                # deterministic mode: solve at THIS boundary (trigger
+                # conditions guarantee no suspended batch is in flight)
+                finish_replan(now)
 
         while True:
             now = clock.now()
@@ -1453,19 +1593,28 @@ class ServingEngine:
                     drift = tracker.drift(ref)
                     if drift > replan_drift:
                         mix_now = tracker.mix()
-                        replan_slot = {"mix": mix_now}
                         self.replan_log.append(
                             {"t": now, "event": "trigger", "drift": drift,
                              "mix": mix_now.as_dict()})
-                        replan_thread = threading.Thread(
-                            target=self._replan_worker,
-                            args=(mix_now, replan_slot), daemon=True)
-                        replan_thread.start()
-                        if not replan_background:
-                            # deterministic mode: solve at THIS boundary
-                            # (trigger condition guarantees no suspended
-                            # batch is in flight)
-                            finish_replan(now)
+                        start_replan(now, mix_now, proactive=False)
+                    elif replan_feasibility:
+                        # proactive trigger: the FITTED curve says the
+                        # current split cannot meet the observed mix's
+                        # deadlines — re-plan now, ahead of the miss,
+                        # instead of waiting for drift or the boundary
+                        # where the miss lands. Inert until the cost
+                        # model calibrates (predicate returns {}).
+                        mix_now = tracker.mix()
+                        flagged = self._predict_infeasible(cost, slo,
+                                                           mix_now)
+                        sig = split_signature()
+                        if flagged and sig not in feas_tried:
+                            feas_tried.add(sig)
+                            self.replan_log.append(
+                                {"t": now, "event": "feasibility",
+                                 "infeasible": flagged,
+                                 "mix": mix_now.as_dict()})
+                            start_replan(now, mix_now, proactive=True)
             if not any(pending.values()) and ses.suspended is None:
                 if stream.exhausted:
                     break
@@ -1578,6 +1727,13 @@ class ServingEngine:
                 item.t_start = clock.now()
                 self.batch_log.append((item.t_start, name, item.batch.size))
                 item.started = True
+                # cost-model sample features, frozen at first start: the
+                # price the scheduler believed, the restream this batch
+                # pays, and its planned decode length
+                item.predicted_s = cost.estimate(name, item.batch.size)
+                item.cold_bytes = self._cold_bytes(name)
+                item.decode_tokens = sum(r.decode_tokens
+                                         for r in item.batch.requests)
                 if self.unified:
                     # arena for the batch + each member's prompt KV
                     self._kv_batch_begin(name, item, item.t_start)
@@ -1651,7 +1807,14 @@ class ServingEngine:
                 yield ("preempt", (name, item.state.op_idx))
                 continue
             self._release_protection(name)
-            cost.observe(name, item.charged_s, item.batch.size)
+            if isinstance(cost, OnlineLatencyModel):
+                # the learned model fits the full feature vector; its
+                # EWMA fallback sees exactly the plain observe() update
+                cost.observe_sample(name, item.charged_s, item.batch.size,
+                                    cold_bytes=item.cold_bytes,
+                                    decode_tokens=item.decode_tokens)
+            else:
+                cost.observe(name, item.charged_s, item.batch.size)
             batch, t0 = item.batch, item.t_start
             dt = clock.now() - t0
             result, stats.result = stats.result, None
@@ -1680,7 +1843,9 @@ class ServingEngine:
                     batch_size=batch.size,
                     deadline_s=d if math.isfinite(d) else req.deadline_s,
                     priority=req.priority, req_id=req.req_id,
-                    kv_bytes=kvb.get(self._sid(req), 0)))
+                    kv_bytes=kvb.get(self._sid(req), 0),
+                    predicted_s=item.predicted_s,
+                    charged_s=item.charged_s))
             last = name
             yield ("batch", (name, item.charged_s))
         if replan_thread is not None:
@@ -1716,7 +1881,15 @@ class ServingEngine:
         ``deferred_joins`` read the engine-LIFETIME logs (every log on
         this engine accumulates across calls): pass one serve() run's
         responses on a fresh engine — as the benchmarks do — for a
-        consistent picture."""
+        consistent picture.
+
+        ``calibration`` reports the learned cost model's per-model fit
+        (``OnlineLatencyModel.calibration_report``: sample counts,
+        calibrated flag, prequential error, and ``drift`` — the EWMA of
+        recent relative error that rises when the machine moves away from
+        the fit) — ``{}`` when the last serve ran the plain EWMA
+        estimator."""
+        cost = getattr(self, "cost_model", None)
         return {
             "requests": len(responses),
             "served": sum(1 for r in responses if r.status == "ok"),
@@ -1728,6 +1901,9 @@ class ServingEngine:
             # logs, which truncate at log_cap on trace-scale replays
             "preemptions": self.preempt_log.total,
             "deferred_joins": self.deferred_joins,
+            "calibration": (cost.calibration_report()
+                            if isinstance(cost, OnlineLatencyModel)
+                            else {}),
         }
 
     def model_report(self) -> Dict[str, ModelReport]:

@@ -153,6 +153,12 @@ class Response:
     # KV bytes this request's sequence held in the unified pool at
     # completion (0 under weights-only serving)
     kv_bytes: int = 0
+    # cost-model observability (serve()): what the scheduler's cost model
+    # priced this request's batch at when the batch first started, and
+    # what the serving clock actually charged for the whole execution.
+    # Shared across a batch's members; 0.0 for rejected / run_all paths.
+    predicted_s: float = 0.0
+    charged_s: float = 0.0
 
     @property
     def finish_s(self) -> float:
@@ -218,6 +224,31 @@ def priority_miss_rate(responses: Iterable[Response]) -> float:
     if total <= 0:
         return 0.0
     return sum(p for p, met in judged if not met) / total
+
+
+def prediction_error(responses: Iterable[Response]) -> Dict[str, dict]:
+    """Per-model realized cost-model error over SERVED responses: how far
+    the scheduler's priced batch latency (``Response.predicted_s``) landed
+    from what the clock actually charged (``Response.charged_s``).
+    Aggregated per response, so larger batches weigh by their member
+    count — the admission/urgency decisions were made once per member.
+    Responses without stamps (run_all, rejected, pre-PR traces) are
+    skipped."""
+    by_m: Dict[str, list] = {}
+    for r in responses:
+        if r.status == "ok" and r.charged_s > 0.0:
+            by_m.setdefault(r.model, []).append(r)
+    out: Dict[str, dict] = {}
+    for m, rs in sorted(by_m.items()):
+        abs_err = [abs(r.predicted_s - r.charged_s) for r in rs]
+        rel_err = [e / max(r.charged_s, 1e-12)
+                   for e, r in zip(abs_err, rs)]
+        out[m] = {
+            "samples": len(rs),
+            "mae_s": float(np.mean(abs_err)),
+            "rel_err": float(np.mean(rel_err)),
+        }
+    return out
 
 
 def per_priority_stats(responses: Iterable[Response]) -> Dict[float, dict]:

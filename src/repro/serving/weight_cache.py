@@ -675,6 +675,31 @@ class WeightCache:
                 self.remove(k)
             return freed
 
+    def evict_model_to(self, model: str, target_bytes: int) -> int:
+        """Shrink one model's residency to at most ``target_bytes``: drop
+        its unpinned entries in LRU order until it fits (pinned bytes can
+        leave it above target). Returns bytes freed. The proactive
+        re-planner calls this right after a feasibility-triggered swap, so
+        models whose cap shrank hand their over-cap bytes back BEFORE the
+        favored model's next prefetch needs the room, instead of one
+        eviction at a time mid-stream. Counted as explicit removals, like
+        ``evict_model``."""
+        target = max(0, int(target_bytes))
+        with self._lock:
+            over = self.model_bytes(model) - target
+            if over <= 0:
+                return 0
+            freed = 0
+            for k in [k for k, e in self._entries.items()
+                      if self._model_of(k) == model and e.pins == 0]:
+                if over <= 0:
+                    break
+                nb = self._entries[k].nbytes
+                self.remove(k)
+                freed += nb
+                over -= nb
+            return freed
+
     def clear(self):
         with self._lock:
             for k in list(self._entries):

@@ -139,6 +139,11 @@ class Scenario:
     # projections are exact (a batch of b charges EXEC*(1+g*(b-1)))
     batch_growth: float = 0.0
     priors: Optional[Dict[str, float]] = None
+    # swap in a different cost model (e.g. a dormant OnlineLatencyModel
+    # for the learned-vs-EWMA equivalence matrix): called with
+    # (priors, batch_growth), must return a BatchLatencyEstimator
+    cost_model_factory: Optional[
+        Callable[[Dict[str, float], float], BatchLatencyEstimator]] = None
     engine_kw: dict = field(default_factory=dict)
     serve_kw: dict = field(default_factory=dict)   # extra serve() kwargs
                                                    # (replan=, mix drift...)
@@ -152,6 +157,13 @@ class Scenario:
             return {n: float(self.exec_time) for n in models}
         return {}
 
+    def cost_model(self, models) -> BatchLatencyEstimator:
+        priors = self.priors_for(models)
+        if self.cost_model_factory is not None:
+            return self.cost_model_factory(priors, self.batch_growth)
+        return BatchLatencyEstimator(priors=priors,
+                                     growth=self.batch_growth)
+
     def run(self, models: Dict[str, HostModel]) -> ScenarioRun:
         eng = make_engine(models, budget_frac=self.budget_frac,
                           **self.engine_kw)
@@ -162,8 +174,7 @@ class Scenario:
             scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
             admission=self.admission, preempt=self.preempt,
             batch_cap=self.batch_cap,
-            cost_model=BatchLatencyEstimator(priors=self.priors_for(models),
-                                             growth=self.batch_growth),
+            cost_model=self.cost_model(models),
             **self.serve_kw)
         assert clock.now() >= max((r.arrival_s for r in self.trace),
                                   default=0.0)

@@ -188,3 +188,71 @@ def test_mixtracker_ewma_decay_and_drift():
     assert tr.drift(ref) > 0.4
     with pytest.raises(ValueError):
         MixTracker(["a"], halflife_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# learned calibration (PR 9): fitted latency scales through the allocator
+# ---------------------------------------------------------------------------
+
+def test_empty_calibration_is_bit_identical():
+    graphs, chunk, budget, mix, quantum = tiny_instance(4)
+    base = allocate_joint(graphs, chunk, budget, mix, hw=HW,
+                          quantum=quantum, mode="brute")
+    cal = allocate_joint(graphs, chunk, budget, mix, hw=HW,
+                         quantum=quantum, mode="brute", calibration={})
+    assert cal.split == base.split
+    assert cal.cost == base.cost
+
+
+def test_calibration_scales_latency_and_shifts_budget():
+    graphs, chunk, budget, mix, quantum = tiny_instance(5)
+    fav = list(graphs)[0]
+    scale = {fav: 8.0}
+    base = allocate_joint(graphs, chunk, budget, mix, hw=HW,
+                          quantum=quantum, mode="brute")
+    scaled = allocate_joint(graphs, chunk, budget, mix, hw=HW,
+                            quantum=quantum, mode="brute",
+                            calibration=scale)
+    # evaluator level: the fitted correction multiplies the analytic
+    # latency exactly, only for the named model
+    ev0 = PlanCostEvaluator(graphs, chunk, hw=HW)
+    ev8 = PlanCostEvaluator(graphs, chunk, hw=HW, calibration=scale)
+    for n in graphs:
+        cap = base.split[n]
+        want = (8.0 if n == fav else 1.0) * ev0.latency(n, cap)
+        assert ev8.latency(n, cap) == pytest.approx(want, rel=1e-12)
+    # differential: the calibrated brute optimum equals independent
+    # enumeration priced through a calibrated evaluator
+    floors = {n: min(model_floor(g, chunk), budget)
+              for n, g in graphs.items()}
+    best = min(split_cost(ev8, mix, s) for s in
+               enumerate_splits(list(graphs), floors, budget, quantum))
+    assert scaled.cost == pytest.approx(best, rel=0, abs=1e-15)
+    # the model the fit says is 8x slower gains per byte 8x faster: it
+    # pulls at least as much budget as in the uncalibrated split
+    assert scaled.split[fav] >= base.split[fav]
+
+
+def test_calibration_validation_and_exclusivity():
+    graphs, chunk, budget, mix, _q = tiny_instance(6)
+    name = list(graphs)[0]
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="calibration"):
+            PlanCostEvaluator(graphs, chunk, hw=HW,
+                              calibration={name: bad})
+    # a pre-built evaluator carries its OWN calibration: passing both
+    # would let one silently win
+    ev = PlanCostEvaluator(graphs, chunk, hw=HW)
+    with pytest.raises(ValueError, match="calibration"):
+        allocate_joint(graphs, chunk, budget, mix, hw=HW,
+                       evaluator=ev, calibration={name: 2.0})
+
+
+def test_plan_multi_model_records_calibration():
+    from repro.core import plan_multi_model
+    graphs, chunk, budget, mix, _q = tiny_instance(7)
+    cal = {list(graphs)[0]: 2.0}
+    mm = plan_multi_model(graphs, chunk, budget, hw=HW,
+                          mix=mix.as_dict(), calibration=cal)
+    assert "split" in mm.meta
+    assert mm.meta["calibration"] == cal

@@ -1,0 +1,305 @@
+"""PR-9 learned latency models (core/latency_model.OnlineLatencyModel).
+
+Four layers of evidence, mirroring the PR-8 equivalence discipline:
+
+  * differential — the recursive fit must equal the CLOSED-FORM ridge
+    solution (``numpy.linalg.lstsq`` on the augmented system) to 1e-8 on
+    seeded random streams, and be invariant to sample order;
+  * dormancy — with the learned path disabled (``min_samples`` never
+    reached) every serving scenario in the matrix must replay
+    BIT-FOR-BIT identically to the plain EWMA estimator: responses,
+    ``slo_report()`` (minus the new ``calibration`` key), the executed
+    batch schedule, the pool ledger, and the final clock;
+  * recovery — served through the engine on a ``SimClock`` whose charge
+    grows with batch size, the fit must recover the true base latency
+    and growth factor from a WRONG prior, and the prequential drift
+    signal must converge toward zero;
+  * validation — ``batch_size < 1`` is rejected everywhere (the PR-9
+    regression fix on ``BatchLatencyEstimator.estimate``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from serving_scenarios import (EXEC, Scenario, ScenarioRun, build_models,
+                               make_engine, tok)
+from test_event_driven import _response_fields, _scenario_matrix
+from repro.core.latency_model import (COLD_SCALE, DECODE_SCALE, N_FEATURES,
+                                      BatchLatencyEstimator,
+                                      OnlineLatencyModel)
+from repro.serving.batcher import BatcherConfig
+from repro.serving.clock import SimClock
+from repro.serving.engine import Request
+from repro.serving.stream import RequestStream
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(("a", "b", "c"))
+
+
+# ---------------------------------------------------------------------------
+# differential: RLS == closed-form ridge, order-invariant
+# ---------------------------------------------------------------------------
+
+def _closed_form_ridge(X, y, lam, theta0):
+    """argmin ||y - X th||^2 + lam ||th - th0||^2 via the augmented
+    least-squares system — the independent oracle the RLS must match."""
+    A = np.vstack([X, math.sqrt(lam) * np.eye(N_FEATURES)])
+    b = np.concatenate([y, math.sqrt(lam) * np.asarray(theta0)])
+    theta, *_ = np.linalg.lstsq(A, b, rcond=None)
+    return theta
+
+
+def _random_stream(rng, n):
+    """(batch_size, cold_bytes, decode_tokens, charged_s) samples from a
+    noisy linear ground truth over the model's feature space."""
+    rows = []
+    for _ in range(n):
+        b = int(rng.integers(1, 9))
+        cold = int(rng.integers(0, 2 << 30))
+        dec = int(rng.integers(0, 4096))
+        y = (0.03 + 0.012 * (b - 1) + 0.08 * cold / COLD_SCALE
+             + 0.02 * dec / DECODE_SCALE + 0.002 * rng.standard_normal())
+        rows.append((b, cold, dec, abs(float(y)) + 1e-4))
+    return rows
+
+
+def _feed(model, name, rows):
+    for b, cold, dec, y in rows:
+        model.observe_sample(name, y, batch_size=b, cold_bytes=cold,
+                             decode_tokens=dec)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_rls_matches_closed_form_ridge(seed):
+    rng = np.random.default_rng(2000 + seed)
+    rows = _random_stream(rng, 64)
+    lam = 1e-3
+    om = OnlineLatencyModel(priors={"m": 0.04}, growth=0.5,
+                            ridge_lambda=lam, min_samples=10**9)
+    _feed(om, "m", rows)
+    X = np.array([OnlineLatencyModel.features_of(b, c, d)
+                  for b, c, d, _ in rows])
+    y = np.array([y for *_, y in rows])
+    # theta0 is the analytic warm start captured at the first sample:
+    # [prior, growth * prior, 0, 0]
+    ref = _closed_form_ridge(X, y, lam, [0.04, 0.02, 0.0, 0.0])
+    np.testing.assert_allclose(om._theta["m"], ref, rtol=0, atol=1e-8)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_rls_is_sample_order_invariant(seed):
+    rng = np.random.default_rng(3000 + seed)
+    rows = _random_stream(rng, 48)
+    a = OnlineLatencyModel(priors={"m": 0.04}, growth=0.5)
+    b = OnlineLatencyModel(priors={"m": 0.04}, growth=0.5)
+    _feed(a, "m", rows)
+    shuffled = list(rows)
+    rng.shuffle(shuffled)
+    _feed(b, "m", shuffled)
+    np.testing.assert_allclose(a._theta["m"], b._theta["m"],
+                               rtol=0, atol=1e-8)
+    # the EWMA fallback is order-SENSITIVE by design; only the fit and
+    # the mean-feature state must agree
+    np.testing.assert_allclose(a._feat_sum["m"], b._feat_sum["m"],
+                               rtol=0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# dormancy: estimates defer to the EWMA parent bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_dormant_estimates_equal_ewma_parent():
+    rng = np.random.default_rng(4)
+    rows = _random_stream(rng, 20)
+    om = OnlineLatencyModel(priors={"m": 0.03}, growth=0.2,
+                            min_samples=math.inf)
+    ew = BatchLatencyEstimator(priors={"m": 0.03}, growth=0.2)
+    for b, cold, dec, y in rows:
+        om.observe_sample("m", y, batch_size=b, cold_bytes=cold,
+                          decode_tokens=dec)
+        ew.observe("m", y, batch_size=b)
+        for q in (1, 2, 4):
+            assert om.estimate("m", q) == ew.estimate("m", q)
+    assert not om.calibrated("m")
+    assert om.calibration_scales({"m": 0.05}) == {}
+
+
+def test_calibration_flips_at_min_samples():
+    om = OnlineLatencyModel(prior_s=0.5, min_samples=4)
+    ew = BatchLatencyEstimator(prior_s=0.5)
+    for i in range(4):
+        assert om.calibrated("m") is False
+        assert om.estimate("m", 2) == ew.estimate("m", 2)
+        om.observe_sample("m", 0.05, batch_size=1 + i % 2)
+        ew.observe("m", 0.05, batch_size=1 + i % 2)
+    assert om.calibrated("m") is True
+    # calibrated: the fit prices the noiseless samples (up to the ridge
+    # pull toward the wrong 0.5 prior, which shrinks with sample count)
+    assert om.estimate("m", 1) == pytest.approx(0.05, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# dormancy at the SERVING level: the full scenario matrix, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _run_matrix(sc: Scenario, models) -> ScenarioRun:
+    """test_event_driven._run's warmup discipline: stream every model
+    fully resident under a no-eviction budget first, so the whole serve
+    call is deterministic run-to-run."""
+    eng = make_engine(models, budget_frac=1.5, **sc.engine_kw)
+    rng = np.random.default_rng(0)
+    for n in models:
+        eng.submit(Request(model=n, tokens=tok(rng), arrival_s=0.0))
+    eng.run_all()
+    clock = SimClock(exec_time=sc.exec_time, batch_growth=sc.batch_growth)
+    responses = eng.serve(
+        RequestStream.from_trace(list(sc.trace)), clock=clock,
+        scheduler=sc.scheduler, batcher=sc.batcher, slo=sc.slo,
+        admission=sc.admission, preempt=sc.preempt, batch_cap=sc.batch_cap,
+        cost_model=sc.cost_model(models), **sc.serve_kw)
+    return ScenarioRun(engine=eng, clock=clock, responses=responses)
+
+
+@pytest.mark.parametrize("name", ["fifo+batch", "arrival", "static",
+                                  "slo+admission+cap", "slo+preempt",
+                                  "slo+replan"])
+def test_dormant_learned_model_bit_identical_to_ewma(models, name):
+    sc = _scenario_matrix(models)[name]
+    ewma = _run_matrix(sc, models)
+    dormant = _run_matrix(
+        replace(sc, cost_model_factory=lambda priors, growth:
+                OnlineLatencyModel(priors=priors, growth=growth,
+                                   min_samples=math.inf)), models)
+    assert len(ewma.responses) == len(dormant.responses), name
+    for a, b in zip(ewma.responses, dormant.responses):
+        assert _response_fields(a) == _response_fields(b), name
+        assert (a.predicted_s, a.charged_s) == \
+            (b.predicted_s, b.charged_s), name
+        if a.result is None:
+            assert b.result is None, name
+        else:
+            assert np.array_equal(np.asarray(a.result),
+                                  np.asarray(b.result)), name
+    rep_e = ewma.engine.slo_report(ewma.responses)
+    rep_d = dormant.engine.slo_report(dormant.responses)
+    # the ONLY divergence the dormant model is allowed: its report carries
+    # per-model (uncalibrated) fit telemetry where the EWMA's is empty
+    cal = rep_d.pop("calibration")
+    assert rep_e.pop("calibration") == {}, name
+    assert rep_e == rep_d, name
+    assert cal and all(st["samples"] > 0 and not st["calibrated"]
+                       for st in cal.values()), name
+    assert ewma.batch_models() == dormant.batch_models(), name
+    # no feasibility trigger may fire while dormant
+    assert all(e["event"] != "feasibility"
+               for e in dormant.engine.replan_log), name
+    for run in (ewma, dormant):
+        assert run.engine.cache.ledger_balanced(), name
+    se = ewma.engine.cache.stats_snapshot()
+    sd = dormant.engine.cache.stats_snapshot()
+    for k in ("used_bytes", "evictions", "evicted_bytes",
+              "release_underflows"):
+        assert se[k] == sd[k], (name, k)
+    assert ewma.clock.now() == dormant.clock.now(), name
+
+
+# ---------------------------------------------------------------------------
+# calibration recovery through the engine
+# ---------------------------------------------------------------------------
+
+def test_calibration_recovers_growth_through_engine(models):
+    """Bursty single-model trace on a SimClock charging
+    EXEC * (1 + g*(b-1)): served with a WRONG prior (10x the true base,
+    zero growth), the fit must recover both the base and g, and the
+    drift signal must decay to ~0 once calibrated."""
+    g = 0.4
+    rng = np.random.default_rng(7)
+    trace = []
+    t = 0.0
+    for _ in range(8):
+        for b in (1, 2, 3, 4):         # burst of b → one batch of size b
+            for _ in range(b):
+                trace.append(Request(model="a", tokens=tok(rng),
+                                     arrival_s=t))
+            t += 0.5
+    sc = Scenario(
+        trace=trace, scheduler="fifo", budget_frac=1.5,
+        batcher=BatcherConfig(max_batch=4, max_wait_s=EXEC / 2),
+        batch_growth=g, engine_kw={"prefetch": False},
+        cost_model_factory=lambda priors, growth:
+            OnlineLatencyModel(prior_s=10 * EXEC, min_samples=6))
+    run = sc.run(models)
+    assert all(r.status == "ok" for r in run.responses)
+    sizes = {r.batch_size for r in run.responses}
+    assert sizes == {1, 2, 3, 4}, sizes
+    cost = run.engine.cost_model
+    assert isinstance(cost, OnlineLatencyModel) and cost.calibrated("a")
+    coef = cost.coefficients("a")
+    assert coef["base_s"] == pytest.approx(EXEC, rel=0.05)
+    assert coef["growth"] == pytest.approx(g, abs=0.05)
+    cal = run.engine.slo_report(run.responses)["calibration"]["a"]
+    assert cal["calibrated"] and cal["samples"] == 32
+    assert cal["drift"] < 0.02, cal
+    # calibrated estimates price the observed curve, not the EWMA's
+    # normalized-by-zero-growth flat line
+    for b in (1, 2, 3, 4):
+        assert cost.estimate("a", b) == pytest.approx(
+            EXEC * (1 + g * (b - 1)), rel=0.05)
+    # responses carry the priced-vs-charged pair for the error reduction
+    from repro.serving.types import prediction_error
+    perr = prediction_error(run.responses)["a"]
+    assert perr["samples"] == len(run.responses)
+    # lifetime number includes the mispriced warmup; the LAST cycle's
+    # batches must be priced nearly exactly
+    tail = prediction_error(
+        [r for r in run.responses if r.arrival_s >= t - 2.0])["a"]
+    assert tail["rel_err"] < 0.02, tail
+
+
+def test_calibration_scales_observed_over_analytic():
+    om = OnlineLatencyModel(min_samples=2)
+    for _ in range(3):
+        om.observe_sample("m", 0.10, batch_size=1)
+        om.observe_sample("other", 0.10, batch_size=1)
+    scales = om.calibration_scales({"m": 0.05, "other": 0.0,
+                                    "absent": 0.025})
+    # observed 0.10 over analytic 0.05 → 2x (up to the ridge pull);
+    # degenerate analytic and never-observed models are omitted
+    assert scales["m"] == pytest.approx(2.0, rel=1e-3)
+    assert "other" not in scales and "absent" not in scales
+    # extreme ratios clip rather than poison the allocator
+    assert om.calibration_scales({"m": 1e-9})["m"] == 16.0
+    assert om.calibration_scales({"m": 1e9})["m"] == 1.0 / 16.0
+
+
+# ---------------------------------------------------------------------------
+# regression: batch_size validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [0, -1, -7])
+def test_batch_size_below_one_rejected(bad):
+    est = BatchLatencyEstimator()
+    with pytest.raises(ValueError, match="batch_size"):
+        est.estimate("m", bad)
+    with pytest.raises(ValueError, match="batch_size"):
+        est.observe("m", 0.1, batch_size=bad)
+    om = OnlineLatencyModel()
+    with pytest.raises(ValueError, match="batch_size"):
+        om.estimate("m", bad)
+    with pytest.raises(ValueError, match="batch_size"):
+        om.observe_sample("m", 0.1, batch_size=bad)
+    with pytest.raises(ValueError, match="batch_size"):
+        OnlineLatencyModel.features_of(bad)
+
+
+def test_batch_size_one_still_fine():
+    est = BatchLatencyEstimator(priors={"m": 0.05}, growth=0.3)
+    assert est.estimate("m", 1) == 0.05
+    est.observe("m", 0.06, batch_size=1)
+    assert est.estimate("m", 1) == 0.06
