@@ -50,18 +50,21 @@ import time
 import tracemalloc
 from dataclasses import replace
 
+import numpy as np
+
 from benchmarks.common import Row
 from repro.configs.gptneo import GPTNEO_S
 from repro.core.latency_model import BatchLatencyEstimator
 from repro.core.streaming import HostModel, RunStats
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
+from repro.serving.config import ServeConfig
 from repro.serving.engine import ServingEngine
 from repro.serving.stream import RequestStream
 from repro.serving.traces import (TenantSpec, diurnal_trace,
                                   flash_crowd_trace, jain_fairness,
                                   multi_tenant_trace, session_trace)
-from repro.serving.types import SLOConfig
+from repro.serving.types import Request, SLOConfig, prediction_error
 
 SEQ = 8
 VOCAB = 64
@@ -114,17 +117,20 @@ def _engine(models) -> ServingEngine:
     return eng
 
 
-def _replay(models, trace, scheduler: str, *, measure_mem: bool = False):
+def _replay(models, trace, scheduler: str, *, measure_mem: bool = False,
+            result_mode: str = "object"):
     """One full replay; returns (engine, session, responses, wall_s,
     tracemalloc_peak_bytes_or_None)."""
     eng = _engine(models)
     sess = eng.serve_session(
         RequestStream.from_trace(list(trace)),
         clock=SimClock(exec_time=EXEC_S, batch_growth=BATCH_GROWTH),
-        scheduler=scheduler, slo=SLOConfig(default_slo_s=SLO_S),
-        batcher=BatcherConfig(max_batch=MAX_BATCH, max_wait_s=0.01),
-        cost_model=BatchLatencyEstimator(priors={n: EXEC_S for n in models},
-                                         growth=BATCH_GROWTH))
+        config=ServeConfig(
+            scheduler=scheduler, slo=SLOConfig(default_slo_s=SLO_S),
+            batcher=BatcherConfig(max_batch=MAX_BATCH, max_wait_s=0.01),
+            cost_model=BatchLatencyEstimator(
+                priors={n: EXEC_S for n in models}, growth=BATCH_GROWTH),
+            result_mode=result_mode))
     peak = None
     if measure_mem:
         tracemalloc.start()
@@ -194,6 +200,23 @@ def _flash(models, n: int):
                              vocab=VOCAB, seq=SEQ, seed=11)
 
 
+def _bulk_trace(models, n: int, *, rate: float = 400.0, seed: int = 17):
+    """``n``-request constant-rate Poisson trace built the columnar way:
+    vectorized numpy arrivals and model picks, ONE shared tokens array
+    across every request (the synthetic executor never reads tokens), and
+    stamped ``req_id``s. At 10^6 requests the per-request token arrays a
+    normal generator allocates would dominate memory before the serve
+    loop even starts."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    names = tuple(models)
+    which = rng.integers(0, len(names), size=n)
+    tokens = rng.integers(0, VOCAB, (1, SEQ)).astype(np.int32)
+    return [Request(model=names[w], tokens=tokens, arrival_s=t, req_id=i)
+            for i, (w, t) in enumerate(zip(which.tolist(),
+                                           arrivals.tolist()))]
+
+
 TENANTS = {
     "interactive": TenantSpec(models=("a", "b"), rate=240.0,
                               slo_s=0.06, priority=2.0),
@@ -216,12 +239,56 @@ def _tenant_metrics(responses, tenant_of) -> dict:
                 [per[n]["ontime_frac"] for n in sorted(per)])}
 
 
+def _scale_family(models, *, n_equiv: int, n_big: int,
+                  smoke: bool) -> dict:
+    """The PR-10 columnar cell: (1) replay the same trace in object and
+    columnar storage and assert the reducers agree bit-for-bit — the two
+    modes feed one vectorized kernel, and with synthetic executors every
+    response field is deterministic, so the full row round-trip must be
+    exact too; (2) push the columnar path to ``n_big`` requests (10^6 in
+    full mode) under the standard wall/step/log budgets, with tracemalloc
+    peak PER REQUEST strictly below the object mode's — the object path's
+    per-request dataclass allocations are what the struct-of-arrays
+    layout removes."""
+    trace = _bulk_trace(models, n_equiv)
+    eng_o, sess_o, resp_o, wall_o, peak_o = _replay(
+        models, trace, "slo", measure_mem=True)
+    eng_c, sess_c, resp_c, wall_c, peak_c = _replay(
+        models, trace, "slo", measure_mem=True, result_mode="columnar")
+    assert eng_o.slo_report(resp_o) == eng_c.slo_report(resp_c), \
+        "object vs columnar slo_report diverged"
+    assert prediction_error(resp_o) == prediction_error(resp_c), \
+        "object vs columnar prediction_error diverged"
+    assert resp_o == resp_c.to_responses(), \
+        "object vs columnar row round-trip diverged"
+    assert peak_c < peak_o, \
+        f"columnar peak {peak_c} not below object peak {peak_o} " \
+        f"at n={n_equiv}"
+
+    big = _bulk_trace(models, n_big)
+    eng_b, sess_b, resp_b, wall_b, peak_b = _replay(
+        models, big, "slo", measure_mem=True, result_mode="columnar")
+    _assert_budgets(eng_b, sess_b, n_big, wall_b, peak_b,
+                    at_scale=not smoke)
+    assert peak_b / n_big < peak_o / n_equiv, \
+        f"columnar per-request peak {peak_b / n_big:.1f}B not below " \
+        f"object mode's {peak_o / n_equiv:.1f}B"
+    return {
+        "requests": n_big,
+        "object": _cell(eng_o, sess_o, resp_o, wall_o, peak_o),
+        "columnar": _cell(eng_c, sess_c, resp_c, wall_c, peak_c),
+        "columnar_big": _cell(eng_b, sess_b, resp_b, wall_b, peak_b),
+    }
+
+
 def sweep(*, smoke: bool = False) -> dict:
     models = _models()
-    sizes = ({"diurnal": 2000, "flash": 1500, "mt": 1500, "session": 600}
+    sizes = ({"diurnal": 2000, "flash": 1500, "mt": 1500, "session": 600,
+              "scale_equiv": 5_000, "scale_big": 50_000}
              if smoke else
              {"diurnal": 100_000, "flash": 20_000, "mt": 20_000,
-              "session": 5_000})
+              "session": 5_000,
+              "scale_equiv": 100_000, "scale_big": 1_000_000})
     result = {"bench": "trace_scale", "exec_s": EXEC_S,
               "batch_growth": BATCH_GROWTH, "max_batch": MAX_BATCH,
               "slo_s": SLO_S, "log_cap": LOG_CAP, "families": {}}
@@ -270,6 +337,11 @@ def sweep(*, smoke: bool = False) -> dict:
         cell["switch_frac"] = switches / max(len(batches) - 1, 1)
         fam[sched] = cell
     result["families"]["session"] = fam
+
+    # -- scale: columnar response path (PR 10) -----------------------------
+    result["families"]["scale"] = _scale_family(
+        models, n_equiv=sizes["scale_equiv"], n_big=sizes["scale_big"],
+        smoke=smoke)
     return result
 
 
@@ -277,15 +349,16 @@ def run():
     result = sweep(smoke=True)
     rows = []
     for fam, cells in result["families"].items():
-        for sched in SCHEDULERS:
-            m = cells[sched]
+        for key, m in cells.items():
+            if not isinstance(m, dict):
+                continue            # the family-level "requests" count
             extra = ""
             if "jain_frac" in m:
                 extra = f" jain={m['jain_frac']:.2f}"
             if "switch_frac" in m:
                 extra = f" switch={m['switch_frac']:.2f}"
             rows.append(Row(
-                f"trace_scale/{fam}/{sched}", m["per_event_us"],
+                f"trace_scale/{fam}/{key}", m["per_event_us"],
                 f"n={m['requests']} served={m['served']} "
                 f"miss={m['miss_rate']:.2f} "
                 f"rej={m['rejection_rate']:.2f} "

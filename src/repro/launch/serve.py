@@ -68,6 +68,8 @@ from repro.configs import get_arch
 from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
+from repro.serving.config import add_serve_config_flags, \
+    serve_config_from_args
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.stream import (RequestStream, assign_priorities,
                                   poisson_trace)
@@ -76,6 +78,10 @@ from repro.serving.types import SLOConfig
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    # serve-loop knobs (--scheduler/--step-mode/--admission/--preempt/
+    # --batch-cap/--replan*/--result-mode) derive from ServeConfig: one
+    # source of truth for names, defaults, choices, and help text
+    add_serve_config_flags(ap)
     ap.add_argument("--models", default="gptneo-s")
     ap.add_argument("--policy", choices=["stream", "preload"], default="stream")
     ap.add_argument("--requests", type=int, default=6)
@@ -94,11 +100,6 @@ def main(argv=None):
                     help="online: per-model arrival rate (req/s, virtual)")
     ap.add_argument("--duration", type=float, default=2.0,
                     help="online: trace duration (virtual seconds)")
-    ap.add_argument("--scheduler",
-                    choices=["fifo", "arrival", "static", "slo"],
-                    default="fifo", help="online: run/prefetch picking "
-                    "(fifo = arrival-order; slo = earliest-feasible-"
-                    "deadline with preemption + admission control)")
     ap.add_argument("--slo-ms", type=float, default=250.0,
                     help="online: per-request latency SLO (deadline = "
                     "arrival + slo; used by --scheduler slo)")
@@ -107,12 +108,6 @@ def main(argv=None):
                     "weights as weight:probability pairs, e.g. "
                     "'0:0.2,1:0.6,2:0.2' (0 = best-effort). Empty = all "
                     "priority 1.0 (plain EDF)")
-    ap.add_argument("--batch-cap", choices=["auto", "on", "off"],
-                    default="auto",
-                    help="online: deadline-aware batch feasibility cap — "
-                    "a group stops admitting members once the grown "
-                    "batch's exec estimate would blow the tightest "
-                    "admitted deadline (auto = on under --scheduler slo)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--mix", default="",
@@ -120,14 +115,6 @@ def main(argv=None):
                     "allocator, comma-separated and aligned with --models "
                     "(e.g. --models a,b --mix 8,1). Empty = uniform "
                     "iterative shrink (no joint split)")
-    ap.add_argument("--replan", action="store_true",
-                    help="online: track the observed mix (EWMA arrival "
-                    "rates) and re-plan the joint split in the background "
-                    "when it drifts; the new plan swaps in at a batch "
-                    "boundary, reusing pool-resident bytes")
-    ap.add_argument("--replan-drift", type=float, default=0.3,
-                    help="total-variation drift threshold that triggers "
-                    "an online re-plan (with --replan)")
     ap.add_argument("--cost-model", choices=["ewma", "learned"],
                     default="ewma",
                     help="online: batch-latency cost model. ewma = "
@@ -257,6 +244,14 @@ def main(argv=None):
         clock = SimClock()
         slo = SLOConfig(default_slo_s=args.slo_ms / 1e3) \
             if args.scheduler == "slo" else None
+        cost_model = None
+        if args.cost_model == "learned":
+            from repro.core.latency_model import OnlineLatencyModel
+            cost_model = OnlineLatencyModel(min_samples=args.min_samples)
+        cfg = serve_config_from_args(
+            args, slo=slo, cost_model=cost_model,
+            batcher=BatcherConfig(max_batch=args.max_batch,
+                                  max_wait_s=args.max_wait_ms / 1e3))
         if args.replicas > 1:
             from repro.serving.replica import Replica
             from repro.serving.router import Router
@@ -265,14 +260,11 @@ def main(argv=None):
                 rep = Replica(rid, **engine_kw)
                 for nm, m in models.items():
                     rep.register(nm, m)
-                rep.start(scheduler=args.scheduler, slo=slo,
-                          batcher=BatcherConfig(
-                              max_batch=args.max_batch,
-                              max_wait_s=args.max_wait_ms / 1e3),
-                          batch_cap=(None if args.batch_cap == "auto"
-                                     else args.batch_cap == "on"),
-                          replan=args.replan,
-                          replan_drift=args.replan_drift)
+                # each replica gets its own learned cost model instance
+                # (calibration state must not be shared across engines)
+                rep.start(config=cfg if cost_model is None else
+                          replace(cfg, cost_model=OnlineLatencyModel(
+                              min_samples=args.min_samples)))
                 fleet.append(rep)
             router = Router(fleet, routing=args.routing,
                             timeout_s=args.timeout_ms / 1e3)
@@ -294,19 +286,8 @@ def main(argv=None):
                       f"restream_mb={st['restream_bytes'] / 1e6:.1f} "
                       f"breaker={st['breaker']}")
             return responses, router
-        cost_model = None
-        if args.cost_model == "learned":
-            from repro.core.latency_model import OnlineLatencyModel
-            cost_model = OnlineLatencyModel(min_samples=args.min_samples)
-        responses = engine.serve(
-            RequestStream.from_trace(trace), clock=clock,
-            scheduler=args.scheduler, slo=slo,
-            batcher=BatcherConfig(max_batch=args.max_batch,
-                                  max_wait_s=args.max_wait_ms / 1e3),
-            batch_cap=(None if args.batch_cap == "auto"
-                       else args.batch_cap == "on"),
-            cost_model=cost_model,
-            replan=args.replan, replan_drift=args.replan_drift)
+        responses = engine.serve(RequestStream.from_trace(trace),
+                                 clock=clock, config=cfg)
         for r in responses:
             if r.status == "rejected":
                 print(f"{r.model:14s} arrival {r.arrival_s:7.3f}s "

@@ -117,16 +117,20 @@ from repro.core.streaming import (ExecState, HostModel, PreloadExecutor,
 from repro.serving.batcher import (Batch, BatcherConfig, can_join, make_batch,
                                    split_batch_result)
 from repro.serving.clock import MonotonicClock
+from repro.serving.config import (SCHEDULERS, ServeConfig,
+                                  resolve_serve_config)
+from repro.serving.reports import ModelReport, SLOReport
+from repro.serving.response_table import ResponseTable
 from repro.serving.stream import RequestStream
 from repro.serving.types import (Request, Response, RingLog, SLOConfig,
                                  deadline_miss_rate, per_priority_stats,
-                                 priority_miss_rate, rejection_rate)
+                                 priority_miss_rate, rejection_rate,
+                                 status_counts)
 from repro.serving.weight_cache import KVSpec, WeightCache
 
-__all__ = ["Request", "Response", "SLOConfig", "ModelReport",
-           "ServeSession", "ServingEngine"]
-
-SCHEDULERS = ("fifo", "arrival", "static", "slo")   # "arrival" = fifo alias
+__all__ = ["Request", "Response", "SLOConfig", "ServeConfig", "SLOReport",
+           "ModelReport", "ResponseTable", "ServeSession", "ServingEngine",
+           "SCHEDULERS"]
 
 
 def weighted_urgency(latest_start: float, now: float,
@@ -297,21 +301,6 @@ class _RunningBatch:
                                 self.priority)
 
 
-@dataclass
-class ModelReport:
-    """Per-model aggregate over a run_all/serve history."""
-    requests: int = 0
-    peak_bytes: int = 0
-    avg_bytes: float = 0.0
-    cache_hits: int = 0
-    cache_misses: int = 0
-
-    @property
-    def cache_hit_rate(self) -> float:
-        total = self.cache_hits + self.cache_misses
-        return self.cache_hits / total if total else 0.0
-
-
 class ServeSession:
     """One steppable ``serve()`` call: the engine's online loop as a
     generator the caller advances, instead of a blocking drain.
@@ -337,17 +326,19 @@ class ServeSession:
     """
 
     def __init__(self, engine: "ServingEngine", stream: RequestStream,
-                 clock, poll_interval_s: float, step_mode: str = "event",
-                 **loop_kw):
-        if step_mode not in ("event", "poll"):
-            raise ValueError(f"unknown step_mode {step_mode!r}; "
-                             "expected 'event' or 'poll'")
+                 clock, config: ServeConfig):
         self.engine = engine
         self.stream = stream
         self.clock = clock
-        self.poll_interval_s = poll_interval_s
-        self.step_mode = step_mode
-        self.responses: List[Response] = []
+        # the validated knob set this session runs under (PR 10) —
+        # poll_interval_s/step_mode mirror it for existing callers
+        self.config = config
+        self.poll_interval_s = config.poll_interval_s
+        self.step_mode = config.step_mode
+        # result_mode="columnar": struct-of-arrays ResponseTable instead
+        # of a List[Response] — same row order, no result tensors
+        self.responses = (ResponseTable()
+                          if config.result_mode == "columnar" else [])
         # per-model pending queues: deque under fifo/static, _SortedQueue
         # under the weighted-EDF "slo" scheduler
         self.pending: Dict[str, Deque[Request]] = {}
@@ -356,7 +347,18 @@ class ServeSession:
         self.idle = False           # last step yielded "idle"
         self.steps = 0              # step() calls that advanced the loop —
                                     # the trace-scale O(events) check
-        self._gen = engine._serve_loop(self, stream, clock, **loop_kw)
+        self._gen = engine._serve_loop(
+            self, stream, clock, batcher=config.batcher,
+            scheduler=config.scheduler,
+            speculative_lookahead_ops=config.speculative_lookahead_ops,
+            slo=config.slo, admission=config.admission,
+            preempt=config.preempt, batch_cap=config.batch_cap,
+            cost_model=config.cost_model, replan=config.replan,
+            replan_drift=config.replan_drift,
+            replan_min_observed=config.replan_min_observed,
+            mix_halflife_s=config.mix_halflife_s,
+            replan_background=config.replan_background,
+            replan_feasibility=config.replan_feasibility)
 
     def step(self) -> Tuple[str, object]:
         if self.done:
@@ -400,8 +402,10 @@ class ServeSession:
         # idle on an open, empty stream: blocked until someone pushes
         return self.clock.now() if self.stream.exhausted else math.inf
 
-    def run(self) -> List[Response]:
-        """Drain to completion.
+    def run(self):
+        """Drain to completion, returning ``self.responses`` — a
+        ``List[Response]``, or a ``ResponseTable`` under
+        ``result_mode="columnar"``.
 
         ``step_mode="event"`` (default): every idle gap costs ONE step.
         Closed streams (trace replays) sleep exactly to the next arrival
@@ -1181,27 +1185,21 @@ class ServingEngine:
         return out
 
     def serve(self, stream: RequestStream, *,
-              clock=None, batcher: Optional[BatcherConfig] = None,
-              scheduler: str = "arrival",
-              poll_interval_s: float = 0.001,
-              step_mode: str = "event",
-              speculative_lookahead_ops: int = 8,
-              slo: Optional[SLOConfig] = None,
-              admission: Optional[bool] = None,
-              preempt: Optional[bool] = None,
-              batch_cap: Optional[bool] = None,
-              cost_model: Optional[BatchLatencyEstimator] = None,
-              replan: bool = False,
-              replan_drift: float = 0.3,
-              replan_min_observed: int = 8,
-              mix_halflife_s: float = 0.5,
-              replan_background: bool = True,
-              replan_feasibility: bool = True
-              ) -> List[Response]:
+              config: Optional[ServeConfig] = None, clock=None, **kw):
         """Continuous arrival-aware loop: serve a live ``RequestStream``
         until it is closed and drained. Same-model arrivals inside the
         batcher window coalesce into one padded execution; responses are
         de-batched back to per-request latencies (arrival → completion).
+
+        ``config`` (PR 10) is the serve-loop knob set as one validated
+        ``ServeConfig``; the legacy loose keyword arguments (every
+        ``ServeConfig`` field name) are still accepted and merged — an
+        explicit kwarg overrides the matching config field, with a
+        ``DeprecationWarning``. Returns a ``List[Response]`` under the
+        default ``result_mode="object"``, or a columnar
+        ``ResponseTable`` (struct-of-arrays, no result tensors) under
+        ``ServeConfig(result_mode="columnar")`` — the 10^6-request
+        trace-replay mode; the metric reducers accept both.
 
         ``clock`` is the injectable time source (default: real time). With
         a ``SimClock`` and a trace stream the loop — including every
@@ -1291,21 +1289,11 @@ class ServingEngine:
         over-cap models so the favored model finds room at once. Each
         distinct split triggers at most once — a split the re-planner
         cannot improve must not retrigger every iteration."""
-        return self.serve_session(
-            stream, clock=clock, batcher=batcher, scheduler=scheduler,
-            poll_interval_s=poll_interval_s, step_mode=step_mode,
-            speculative_lookahead_ops=speculative_lookahead_ops, slo=slo,
-            admission=admission, preempt=preempt, batch_cap=batch_cap,
-            cost_model=cost_model, replan=replan, replan_drift=replan_drift,
-            replan_min_observed=replan_min_observed,
-            mix_halflife_s=mix_halflife_s,
-            replan_background=replan_background,
-            replan_feasibility=replan_feasibility).run()
+        return self.serve_session(stream, config=config, clock=clock,
+                                  **kw).run()
 
-    def serve_session(self, stream: RequestStream, *, clock=None,
-                      scheduler: str = "arrival",
-                      poll_interval_s: float = 0.001,
-                      step_mode: str = "event",
+    def serve_session(self, stream: RequestStream, *,
+                      config: Optional[ServeConfig] = None, clock=None,
                       **kw) -> "ServeSession":
         """The steppable form of ``serve()``: build a ``ServeSession``
         whose ``step()`` advances the loop by one event (executed batch
@@ -1314,15 +1302,12 @@ class ServingEngine:
         driver (``serving/router.py``) interleaves many sessions on their
         own clocks by stepping whichever replica's ``next_time()`` is
         earliest, without threads and without the engine ever sleeping on
-        its own. Takes the same keyword arguments as ``serve()``."""
-        if scheduler not in SCHEDULERS:
-            # a real error, not an assert: under `python -O` a stripped
-            # assert would silently fall through to fifo scheduling
-            raise ValueError(f"unknown scheduler {scheduler!r}; "
-                             f"expected one of {SCHEDULERS}")
-        return ServeSession(self, stream, clock or MonotonicClock(),
-                            poll_interval_s, step_mode=step_mode,
-                            scheduler=scheduler, **kw)
+        its own. Takes the same ``config=`` / legacy keyword surface as
+        ``serve()`` (validation — unknown scheduler/step_mode/
+        result_mode, incoherent replan knobs — raises here, at
+        construction)."""
+        cfg = resolve_serve_config(config, kw)
+        return ServeSession(self, stream, clock or MonotonicClock(), cfg)
 
     def _serve_loop(self, ses: "ServeSession", stream: RequestStream,
                     clock, *, batcher: Optional[BatcherConfig] = None,
@@ -1381,6 +1366,9 @@ class ServingEngine:
         # is the single preemption slot
         pending = ses.pending
         out = ses.responses
+        # columnar mode (PR 10): append rows into the struct-of-arrays
+        # table instead of constructing one Response object per request
+        columnar = isinstance(out, ResponseTable)
         last: Optional[str] = None
         max_b = batcher.max_batch if batcher is not None else 1
 
@@ -1485,10 +1473,16 @@ class ServingEngine:
             self.admission_counts[kind] = \
                 self.admission_counts.get(kind, 0) + 1
             self.admission_log.append((now, r.model, eta, d, kind))
-            out.append(Response(r.model, max(0.0, now - r.arrival_s),
-                                0.0, 0.0, 0, status="rejected",
-                                arrival_s=r.arrival_s, deadline_s=d,
-                                priority=r.priority, req_id=r.req_id))
+            if columnar:
+                out.append(r.model, latency_s=max(0.0, now - r.arrival_s),
+                           status="rejected", arrival_s=r.arrival_s,
+                           deadline_s=d, priority=r.priority,
+                           req_id=r.req_id)
+            else:
+                out.append(Response(r.model, max(0.0, now - r.arrival_s),
+                                    0.0, 0.0, 0, status="rejected",
+                                    arrival_s=r.arrival_s, deadline_s=d,
+                                    priority=r.priority, req_id=r.req_id))
 
         def admit(r: Request, now: float, in_flight_s: float = 0.0,
                   in_flight_deadline: float = math.inf):
@@ -1832,20 +1826,42 @@ class ServingEngine:
                 d = deadline_of(req)
                 derived.pop(id(req), None)
                 seqs.pop(id(req), None)
-                out.append(Response(
-                    name, finish - req.arrival_s, stats.init_s, stats.exec_s,
-                    stats.peak_bytes, avg_bytes=stats.avg_bytes,
-                    cache_hits=stats.cache_hits,
-                    cache_misses=stats.cache_misses,
-                    cache_hit_rate=stats.cache_hit_rate, result=res,
-                    arrival_s=req.arrival_s,
-                    queue_s=max(0.0, t0 - req.arrival_s),
-                    batch_size=batch.size,
-                    deadline_s=d if math.isfinite(d) else req.deadline_s,
-                    priority=req.priority, req_id=req.req_id,
-                    kv_bytes=kvb.get(self._sid(req), 0),
-                    predicted_s=item.predicted_s,
-                    charged_s=item.charged_s))
+                if columnar:
+                    # res (the de-batched result tensor) is dropped:
+                    # columnar mode carries telemetry, not outputs
+                    out.append(
+                        name, latency_s=finish - req.arrival_s,
+                        init_s=stats.init_s, exec_s=stats.exec_s,
+                        peak_bytes=stats.peak_bytes,
+                        avg_bytes=stats.avg_bytes,
+                        cache_hits=stats.cache_hits,
+                        cache_misses=stats.cache_misses,
+                        cache_hit_rate=stats.cache_hit_rate,
+                        arrival_s=req.arrival_s,
+                        queue_s=max(0.0, t0 - req.arrival_s),
+                        batch_size=batch.size,
+                        deadline_s=(d if math.isfinite(d)
+                                    else req.deadline_s),
+                        priority=req.priority, req_id=req.req_id,
+                        kv_bytes=kvb.get(self._sid(req), 0),
+                        predicted_s=item.predicted_s,
+                        charged_s=item.charged_s)
+                else:
+                    out.append(Response(
+                        name, finish - req.arrival_s, stats.init_s,
+                        stats.exec_s,
+                        stats.peak_bytes, avg_bytes=stats.avg_bytes,
+                        cache_hits=stats.cache_hits,
+                        cache_misses=stats.cache_misses,
+                        cache_hit_rate=stats.cache_hit_rate, result=res,
+                        arrival_s=req.arrival_s,
+                        queue_s=max(0.0, t0 - req.arrival_s),
+                        batch_size=batch.size,
+                        deadline_s=d if math.isfinite(d) else req.deadline_s,
+                        priority=req.priority, req_id=req.req_id,
+                        kv_bytes=kvb.get(self._sid(req), 0),
+                        predicted_s=item.predicted_s,
+                        charged_s=item.charged_s))
             last = name
             yield ("batch", (name, item.charged_s))
         if replan_thread is not None:
@@ -1872,13 +1888,15 @@ class ServingEngine:
         misses = sum(s.cache_misses for s in self.stats_log)
         return hits / (hits + misses) if hits + misses else 0.0
 
-    def slo_report(self, responses: List[Response]) -> dict:
+    def slo_report(self, responses) -> SLOReport:
         """SLO/priority summary: global, priority-weighted, and
-        per-priority deadline outcomes over ``responses`` plus the
-        scheduler's intervention counts — the dict the benchmarks and
-        ``launch/serve.py`` print. Note the response-derived rates cover
-        exactly the ``responses`` passed in, while ``preemptions`` /
-        ``deferred_joins`` read the engine-LIFETIME logs (every log on
+        per-priority deadline outcomes over ``responses`` (a
+        ``List[Response]`` or columnar ``ResponseTable`` — identical
+        numbers either way) plus the scheduler's intervention counts —
+        the typed ``SLOReport`` the benchmarks and ``launch/serve.py``
+        print (``as_dict()`` for JSON). Note the response-derived rates
+        cover exactly the ``responses`` passed in, while ``preemptions``
+        / ``deferred_joins`` read the engine-LIFETIME logs (every log on
         this engine accumulates across calls): pass one serve() run's
         responses on a fresh engine — as the benchmarks do — for a
         consistent picture.
@@ -1890,21 +1908,21 @@ class ServingEngine:
         the fit) — ``{}`` when the last serve ran the plain EWMA
         estimator."""
         cost = getattr(self, "cost_model", None)
-        return {
-            "requests": len(responses),
-            "served": sum(1 for r in responses if r.status == "ok"),
-            "miss_rate": deadline_miss_rate(responses),
-            "rejection_rate": rejection_rate(responses),
-            "priority_miss_rate": priority_miss_rate(responses),
-            "per_priority": per_priority_stats(responses),
+        return SLOReport(
+            requests=len(responses),
+            served=status_counts(responses)["ok"],
+            miss_rate=deadline_miss_rate(responses),
+            rejection_rate=rejection_rate(responses),
+            priority_miss_rate=priority_miss_rate(responses),
+            per_priority=per_priority_stats(responses),
             # exact streaming counters — NOT len() over the ring-buffered
             # logs, which truncate at log_cap on trace-scale replays
-            "preemptions": self.preempt_log.total,
-            "deferred_joins": self.deferred_joins,
-            "calibration": (cost.calibration_report()
-                            if isinstance(cost, OnlineLatencyModel)
-                            else {}),
-        }
+            preemptions=self.preempt_log.total,
+            deferred_joins=self.deferred_joins,
+            calibration=(cost.calibration_report()
+                         if isinstance(cost, OnlineLatencyModel)
+                         else {}),
+        )
 
     def model_report(self) -> Dict[str, ModelReport]:
         """Per-model peak/avg memory and cache hit rate over run history."""

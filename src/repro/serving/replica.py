@@ -32,12 +32,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 
 from repro.serving.clock import SimClock
 from repro.serving.engine import ServeSession, ServingEngine
+from repro.serving.reports import ReplicaHealth
 from repro.serving.stream import RequestStream
 from repro.serving.types import RingLog
 
@@ -199,11 +200,13 @@ class Replica:
             self.batch_feed.append((self.clock.now(), model, charged))
         return kind, payload
 
-    def health(self) -> Dict[str, object]:
-        return {
-            "rid": self.rid, "dead": self.dead, "wedged": self.wedged,
-            "slow_factor": self.clock.slow_factor, "load": self.load(),
-            "clock_s": self.clock.now(), "batches": self.batch_feed.total,
-            "free_budget": self.free_budget(),
-            "restream_bytes": self.restream_bytes(),
-        }
+    def health(self) -> ReplicaHealth:
+        """Live observable state as a typed report (PR 10) — the same
+        ``ReplicaHealth`` shape the Router embeds per-replica in its
+        ``FleetReport`` (there with breaker fields filled instead)."""
+        return ReplicaHealth(
+            rid=self.rid, dead=self.dead, wedged=self.wedged,
+            slow_factor=self.clock.slow_factor, load=self.load(),
+            clock_s=self.clock.now(), batches=self.batch_feed.total,
+            free_budget=self.free_budget(),
+            restream_bytes=self.restream_bytes())

@@ -56,8 +56,12 @@ import numpy as np
 
 from repro.ft.resilience import StragglerDetector
 from repro.serving.replica import FaultPlan, Replica
+from repro.serving.reports import FleetReport, ReplicaHealth
+from repro.serving.response_table import ResponseTable
 from repro.serving.types import (Request, Response, RingLog, SLOConfig,
-                                 deadline_miss_rate, rejection_rate)
+                                 _judged_missed, deadline_miss_rate,
+                                 rejection_rate, response_columns,
+                                 status_counts)
 
 ROUTING_POLICIES = ("affinity", "round_robin")
 
@@ -266,11 +270,23 @@ class Router:
     # -- the event pump ----------------------------------------------------
     def serve(self, trace: Sequence[Request], *,
               slo: Optional[SLOConfig] = None,
-              fault_plan: Optional[FaultPlan] = None) -> List[Response]:
+              fault_plan: Optional[FaultPlan] = None):
         for r in self.replicas:
             if r.session is None:
                 raise RuntimeError(f"replica {r.rid} not started — call "
                                    "replica.start(**serve_kw) first")
+        # result mode follows the replicas: when every session stores a
+        # columnar ResponseTable the fleet aggregate is a ResponseTable
+        # too — per-replica rows are rebased onto the caller's timeline
+        # column-wise, never materialized as Response objects.
+        modes = {isinstance(r.session.responses, ResponseTable)
+                 for r in self.replicas}
+        if len(modes) > 1:
+            raise ValueError(
+                "mixed result modes across replicas: start every replica "
+                "with the same ServeConfig.result_mode")
+        columnar = modes.pop()
+        out = ResponseTable() if columnar else None
         self._ring = HashRing([r.rid for r in self.replicas])
         seq = itertools.count()
         events: List[tuple] = []    # (t, seq, kind, payload)
@@ -279,7 +295,9 @@ class Router:
             heapq.heappush(events, (t, next(seq), kind, payload))
 
         inflight: Dict[int, _Tracked] = {}
-        terminal: Dict[int, Response] = {}
+        # object mode: req_id -> terminal Response;
+        # columnar mode: req_id -> row index into `out`
+        terminal: Dict[int, object] = {}
         order: List[int] = []
         drained = {r.rid: 0 for r in self.replicas}   # response cursors
 
@@ -294,7 +312,7 @@ class Router:
                 push(ev.t_s, "fault", ev)
         push(self.health_interval_s, "health", None)
 
-        def resolve(req_id: int, resp: Response, now: float,
+        def resolve(req_id: int, resp, now: float,
                     origin_rid: Optional[int]):
             tr = inflight.pop(req_id, None)
             if tr is None:
@@ -304,12 +322,28 @@ class Router:
             # rebase onto the caller's timeline: latency is arrival →
             # terminal outcome, backoff/queue gaps included
             finish = resp.arrival_s + resp.latency_s
-            terminal[req_id] = replace(
-                resp, req_id=req_id, arrival_s=orig.arrival_s,
-                latency_s=max(0.0, finish - orig.arrival_s),
-                queue_s=resp.queue_s
-                + max(0.0, resp.arrival_s - orig.arrival_s),
-                deadline_s=tr.deadline_s, priority=orig.priority)
+            latency = max(0.0, finish - orig.arrival_s)
+            queue = resp.queue_s + max(0.0, resp.arrival_s - orig.arrival_s)
+            if columnar:
+                # `resp` is a row view over the replica's table; append the
+                # rebased row to the fleet table and remember its index
+                terminal[req_id] = len(out)
+                out.append(
+                    resp.model, latency_s=latency, init_s=resp.init_s,
+                    exec_s=resp.exec_s, peak_bytes=resp.peak_bytes,
+                    avg_bytes=resp.avg_bytes, cache_hits=resp.cache_hits,
+                    cache_misses=resp.cache_misses,
+                    cache_hit_rate=resp.cache_hit_rate,
+                    arrival_s=orig.arrival_s, queue_s=queue,
+                    batch_size=resp.batch_size, status=resp.status,
+                    deadline_s=tr.deadline_s, priority=orig.priority,
+                    req_id=req_id, kv_bytes=resp.kv_bytes,
+                    predicted_s=resp.predicted_s, charged_s=resp.charged_s)
+            else:
+                terminal[req_id] = replace(
+                    resp, req_id=req_id, arrival_s=orig.arrival_s,
+                    latency_s=latency, queue_s=queue,
+                    deadline_s=tr.deadline_s, priority=orig.priority)
             if origin_rid is not None:
                 self.breakers[origin_rid].on_success(now)
 
@@ -326,11 +360,19 @@ class Router:
                 return
             orig = tr.request
             self.failed += 1
-            terminal[req_id] = Response(
-                orig.model, max(0.0, now - orig.arrival_s), 0.0, 0.0, 0,
-                status="failed", arrival_s=orig.arrival_s,
-                deadline_s=tr.deadline_s, priority=orig.priority,
-                req_id=req_id)
+            if columnar:
+                terminal[req_id] = len(out)
+                out.append(orig.model,
+                           latency_s=max(0.0, now - orig.arrival_s),
+                           status="failed", arrival_s=orig.arrival_s,
+                           deadline_s=tr.deadline_s, priority=orig.priority,
+                           req_id=req_id)
+            else:
+                terminal[req_id] = Response(
+                    orig.model, max(0.0, now - orig.arrival_s), 0.0, 0.0, 0,
+                    status="failed", arrival_s=orig.arrival_s,
+                    deadline_s=tr.deadline_s, priority=orig.priority,
+                    req_id=req_id)
 
         def dispatch(req_id: int, now: float):
             tr = inflight.get(req_id)
@@ -429,36 +471,38 @@ class Router:
         for req_id in list(inflight):
             give_up(req_id, max((r.clock.now() for r in self.replicas),
                                 default=0.0))
+        if columnar:
+            # restore arrival order with one fancy-index over the table
+            return out.take([terminal[i] for i in order if i in terminal])
         return [terminal[i] for i in order if i in terminal]
 
     # -- reporting ---------------------------------------------------------
-    def report(self, responses: Sequence[Response]) -> dict:
+    def report(self, responses) -> FleetReport:
         n = len(responses)
-        bad = sum(1 for r in responses
-                  if r.status != "ok" or r.deadline_met is False)
-        return {
-            "requests": n,
-            "served": sum(1 for r in responses if r.status == "ok"),
-            "rejected": sum(1 for r in responses
-                            if r.status == "rejected"),
-            "failed": sum(1 for r in responses if r.status == "failed"),
-            "miss_rate": deadline_miss_rate(responses),
-            "rejection_rate": rejection_rate(responses),
-            # fraction of requests that did NOT get a timely served
-            # response: late + rejected + failed — the fleet SLO number
-            "bad_rate": bad / n if n else 0.0,
-            "retries": self.retries,
-            "gave_up": self.failed,
-            "dup_suppressed": self.dup_suppressed,
-            "restream_bytes": sum(r.restream_bytes()
-                                  for r in self.replicas),
-            "per_replica": {r.rid: {
-                "batches": r.batch_feed.total,
-                "restream_bytes": r.restream_bytes(),
-                "breaker": self.breakers[r.rid].state,
-                "breaker_transitions":
-                    len(self.breakers[r.rid].transitions),
-                "dead": r.dead, "wedged": r.wedged,
-                "slow_factor": r.clock.slow_factor,
-            } for r in self.replicas},
-        }
+        c = response_columns(responses)
+        counts = status_counts(responses)
+        # bad = late + rejected + failed: requests that did NOT get a
+        # timely served response — the fleet SLO number
+        _, missed = _judged_missed(c)
+        bad = (n - counts["ok"]) + int(np.count_nonzero(missed))
+        return FleetReport(
+            requests=n,
+            served=counts["ok"],
+            rejected=counts["rejected"],
+            failed=counts["failed"],
+            miss_rate=deadline_miss_rate(responses),
+            rejection_rate=rejection_rate(responses),
+            bad_rate=bad / n if n else 0.0,
+            retries=self.retries,
+            gave_up=self.failed,
+            dup_suppressed=self.dup_suppressed,
+            restream_bytes=sum(r.restream_bytes()
+                               for r in self.replicas),
+            per_replica={r.rid: ReplicaHealth(
+                rid=r.rid, dead=r.dead, wedged=r.wedged,
+                slow_factor=r.clock.slow_factor,
+                batches=r.batch_feed.total,
+                restream_bytes=r.restream_bytes(),
+                breaker=self.breakers[r.rid].state,
+                breaker_transitions=len(self.breakers[r.rid].transitions),
+            ) for r in self.replicas})

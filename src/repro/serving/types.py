@@ -193,40 +193,119 @@ class SLOConfig:
 
 # ---------------------------------------------------------------------------
 # shared SLO metric reductions (benchmarks + scenario tests)
+#
+# PR 10: every reducer runs ONE vectorized numpy kernel over raw column
+# arrays. A columnar ResponseTable hands its arrays over zero-copy
+# (``reducer_columns()``); an iterable of Response objects is extracted
+# into identical arrays first — so object and columnar modes agree
+# bit-for-bit by construction (same dtypes, same element order, same
+# numpy reduction).
 # ---------------------------------------------------------------------------
 
-def deadline_miss_rate(responses: Iterable[Response]) -> float:
+_STATUS_OK, _STATUS_REJECTED, _STATUS_FAILED = 0, 1, 2
+_STATUS_TO_CODE = {"ok": _STATUS_OK, "rejected": _STATUS_REJECTED,
+                   "failed": _STATUS_FAILED}
+
+
+def response_columns(responses) -> dict:
+    """Reducer-ready column arrays from either a ``ResponseTable``
+    (zero-copy via ``reducer_columns``) or an iterable of ``Response``
+    objects (extracted, preserving order). Keys: status (int8 codes),
+    arrival_s/latency_s/deadline_s (NaN = no deadline)/priority/
+    predicted_s/charged_s (float64), req_id (int64, -1 = unassigned),
+    model_id (int32) + vocab."""
+    rc = getattr(responses, "reducer_columns", None)
+    if rc is not None:
+        return rc()
+    rs = responses if isinstance(responses, (list, tuple)) \
+        else list(responses)
+    n = len(rs)
+    vocab: list = []
+    ids: Dict[str, int] = {}
+    model_id = np.empty(n, dtype=np.int32)
+    for i, r in enumerate(rs):
+        mid = ids.get(r.model)
+        if mid is None:
+            mid = ids[r.model] = len(vocab)
+            vocab.append(r.model)
+        model_id[i] = mid
+    return {
+        "status": np.fromiter(
+            (_STATUS_TO_CODE.get(r.status, _STATUS_FAILED) for r in rs),
+            dtype=np.int8, count=n),
+        "arrival_s": np.fromiter((r.arrival_s for r in rs),
+                                 dtype=np.float64, count=n),
+        "latency_s": np.fromiter((r.latency_s for r in rs),
+                                 dtype=np.float64, count=n),
+        "deadline_s": np.fromiter(
+            (np.nan if r.deadline_s is None else r.deadline_s
+             for r in rs), dtype=np.float64, count=n),
+        "priority": np.fromiter((r.priority for r in rs),
+                                dtype=np.float64, count=n),
+        "predicted_s": np.fromiter((r.predicted_s for r in rs),
+                                   dtype=np.float64, count=n),
+        "charged_s": np.fromiter((r.charged_s for r in rs),
+                                 dtype=np.float64, count=n),
+        "req_id": np.fromiter(
+            (-1 if r.req_id is None else r.req_id for r in rs),
+            dtype=np.int64, count=n),
+        "model_id": model_id,
+        "vocab": vocab,
+    }
+
+
+def _judged_missed(c: dict):
+    """(judged, missed) masks: judged = served with a finite deadline;
+    missed = judged and finished past deadline + 1e-9 (the Response.
+    deadline_met tolerance)."""
+    judged = (c["status"] == _STATUS_OK) & np.isfinite(c["deadline_s"])
+    finish = c["arrival_s"] + c["latency_s"]
+    missed = judged & ~(finish <= c["deadline_s"] + 1e-9)
+    return judged, missed
+
+
+def status_counts(responses) -> Dict[str, int]:
+    """Exact {status: count} over responses (either storage mode)."""
+    status = response_columns(responses)["status"]
+    return {"ok": int(np.count_nonzero(status == _STATUS_OK)),
+            "rejected": int(np.count_nonzero(status == _STATUS_REJECTED)),
+            "failed": int(np.count_nonzero(status == _STATUS_FAILED))}
+
+
+def deadline_miss_rate(responses) -> float:
     """Fraction of SERVED deadlined requests that finished late. Rejected
     requests are not misses — rejection is the explicit alternative the
     admission controller offers — and deadline-less requests can't miss."""
-    judged = [r.deadline_met for r in responses if r.deadline_met is not None]
-    if not judged:
+    judged, missed = _judged_missed(response_columns(responses))
+    n = int(np.count_nonzero(judged))
+    if n == 0:
         return 0.0
-    return sum(1 for met in judged if not met) / len(judged)
+    return int(np.count_nonzero(missed)) / n
 
 
-def rejection_rate(responses: Iterable[Response]) -> float:
+def rejection_rate(responses) -> float:
     """Fraction of all responses the admission controller refused."""
-    rs = list(responses)
-    if not rs:
+    status = response_columns(responses)["status"]
+    n = status.size
+    if n == 0:
         return 0.0
-    return sum(1 for r in rs if r.status == "rejected") / len(rs)
+    return int(np.count_nonzero(status == _STATUS_REJECTED)) / n
 
 
-def priority_miss_rate(responses: Iterable[Response]) -> float:
+def priority_miss_rate(responses) -> float:
     """Priority-WEIGHTED deadline miss rate: each judged response counts
     with its priority, so a priority-2 miss hurts twice as much as a
     priority-1 miss and best-effort (priority-0) work never moves the
     number — the scalar the weighted-EDF scheduler is graded on."""
-    judged = [(r.priority, r.deadline_met) for r in responses
-              if r.deadline_met is not None]
-    total = sum(p for p, _ in judged)
+    c = response_columns(responses)
+    judged, missed = _judged_missed(c)
+    total = float(np.sum(c["priority"][judged]))
     if total <= 0:
         return 0.0
-    return sum(p for p, met in judged if not met) / total
+    return float(np.sum(c["priority"][missed])) / total
 
 
-def prediction_error(responses: Iterable[Response]) -> Dict[str, dict]:
+def prediction_error(responses) -> Dict[str, dict]:
     """Per-model realized cost-model error over SERVED responses: how far
     the scheduler's priced batch latency (``Response.predicted_s``) landed
     from what the clock actually charged (``Response.charged_s``).
@@ -234,42 +313,54 @@ def prediction_error(responses: Iterable[Response]) -> Dict[str, dict]:
     count — the admission/urgency decisions were made once per member.
     Responses without stamps (run_all, rejected, pre-PR traces) are
     skipped."""
-    by_m: Dict[str, list] = {}
-    for r in responses:
-        if r.status == "ok" and r.charged_s > 0.0:
-            by_m.setdefault(r.model, []).append(r)
+    c = response_columns(responses)
+    sampled = (c["status"] == _STATUS_OK) & (c["charged_s"] > 0.0)
+    vocab = c["vocab"]
     out: Dict[str, dict] = {}
-    for m, rs in sorted(by_m.items()):
-        abs_err = [abs(r.predicted_s - r.charged_s) for r in rs]
-        rel_err = [e / max(r.charged_s, 1e-12)
-                   for e, r in zip(abs_err, rs)]
-        out[m] = {
-            "samples": len(rs),
+    for mid in sorted(np.unique(c["model_id"][sampled]).tolist(),
+                      key=lambda i: vocab[i]):
+        m = sampled & (c["model_id"] == mid)
+        charged = c["charged_s"][m]
+        abs_err = np.abs(c["predicted_s"][m] - charged)
+        rel_err = abs_err / np.maximum(charged, 1e-12)
+        out[vocab[mid]] = {
+            "samples": int(np.count_nonzero(m)),
             "mae_s": float(np.mean(abs_err)),
             "rel_err": float(np.mean(rel_err)),
         }
     return out
 
 
-def per_priority_stats(responses: Iterable[Response]) -> Dict[float, dict]:
+def per_priority_stats(responses) -> Dict[float, "PriorityStats"]:
     """Per-priority-level breakdown: request counts, miss/rejection rates,
     and served-latency percentiles — the engine report's view of how each
     traffic class fared (high priority should miss less under overload,
-    low priority should still be served: the aging/starvation check)."""
-    by_p: Dict[float, list] = {}
-    for r in responses:
-        by_p.setdefault(float(r.priority), []).append(r)
-    out: Dict[float, dict] = {}
-    for p, rs in sorted(by_p.items()):
-        served = [r for r in rs if r.status == "ok"]
-        lats = np.array([r.latency_s for r in served], dtype=float)
-        out[p] = {
-            "requests": len(rs),
-            "served": len(served),
-            "rejected": sum(1 for r in rs if r.status == "rejected"),
-            "miss_rate": deadline_miss_rate(rs),
-            "rejection_rate": rejection_rate(rs),
-            "p50_s": float(np.percentile(lats, 50)) if served else float("nan"),
-            "p99_s": float(np.percentile(lats, 99)) if served else float("nan"),
-        }
+    low priority should still be served: the aging/starvation check).
+    Returns typed ``PriorityStats`` (PR 10) keyed by priority weight,
+    ascending."""
+    from repro.serving.reports import PriorityStats
+    c = response_columns(responses)
+    judged, missed = _judged_missed(c)
+    served_mask = c["status"] == _STATUS_OK
+    rejected_mask = c["status"] == _STATUS_REJECTED
+    out: Dict[float, PriorityStats] = {}
+    for p in np.unique(c["priority"]).tolist():
+        m = c["priority"] == p
+        n = int(np.count_nonzero(m))
+        served = int(np.count_nonzero(m & served_mask))
+        nj = int(np.count_nonzero(m & judged))
+        lats = c["latency_s"][m & served_mask]
+        out[float(p)] = PriorityStats(
+            requests=n,
+            served=served,
+            rejected=int(np.count_nonzero(m & rejected_mask)),
+            miss_rate=(int(np.count_nonzero(m & missed)) / nj
+                       if nj else 0.0),
+            rejection_rate=(int(np.count_nonzero(m & rejected_mask)) / n
+                            if n else 0.0),
+            p50_s=float(np.percentile(lats, 50)) if served
+            else float("nan"),
+            p99_s=float(np.percentile(lats, 99)) if served
+            else float("nan"),
+        )
     return out

@@ -16,6 +16,7 @@ of real time); ``EXEC`` is the canonical fixed virtual charge per batch.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Union
 
@@ -26,6 +27,7 @@ from repro.core.latency_model import BatchLatencyEstimator
 from repro.core.streaming import HostModel, PreloadExecutor
 from repro.serving.batcher import BatcherConfig
 from repro.serving.clock import SimClock
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.stream import RequestStream, assign_priorities  # noqa: F401
                                      # (re-exported for scenario tests)
@@ -164,18 +166,42 @@ class Scenario:
         return BatchLatencyEstimator(priors=priors,
                                      growth=self.batch_growth)
 
-    def run(self, models: Dict[str, HostModel]) -> ScenarioRun:
+    def serve_config(self, models,
+                     result_mode: str = "object") -> ServeConfig:
+        """This scenario's knobs as one ``ServeConfig`` (PR 10)."""
+        return ServeConfig(
+            scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
+            admission=self.admission, preempt=self.preempt,
+            batch_cap=self.batch_cap, cost_model=self.cost_model(models),
+            result_mode=result_mode, **self.serve_kw)
+
+    def run(self, models: Dict[str, HostModel], *,
+            use_config: bool = True,
+            result_mode: str = "object") -> ScenarioRun:
+        """Replay the scenario. ``use_config=False`` drives the deprecated
+        loose-kwarg ``serve()`` surface instead of ``config=`` (the
+        legacy-vs-config equivalence matrix exercises both);
+        ``result_mode="columnar"`` stores responses in a
+        ``ResponseTable``."""
         eng = make_engine(models, budget_frac=self.budget_frac,
                           **self.engine_kw)
         clock = SimClock(exec_time=self.exec_time,
                          batch_growth=self.batch_growth)
-        responses = eng.serve(
-            RequestStream.from_trace(list(self.trace)), clock=clock,
-            scheduler=self.scheduler, batcher=self.batcher, slo=self.slo,
-            admission=self.admission, preempt=self.preempt,
-            batch_cap=self.batch_cap,
-            cost_model=self.cost_model(models),
-            **self.serve_kw)
+        stream = RequestStream.from_trace(list(self.trace))
+        if use_config:
+            responses = eng.serve(stream, clock=clock,
+                                  config=self.serve_config(
+                                      models, result_mode=result_mode))
+        else:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                responses = eng.serve(
+                    stream, clock=clock,
+                    scheduler=self.scheduler, batcher=self.batcher,
+                    slo=self.slo, admission=self.admission,
+                    preempt=self.preempt, batch_cap=self.batch_cap,
+                    cost_model=self.cost_model(models),
+                    result_mode=result_mode, **self.serve_kw)
         assert clock.now() >= max((r.arrival_s for r in self.trace),
                                   default=0.0)
         return ScenarioRun(engine=eng, clock=clock, responses=responses)

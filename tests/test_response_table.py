@@ -1,0 +1,290 @@
+"""Columnar response path tests (PR 10): ResponseTable unit behaviour,
+the object-vs-columnar equivalence matrix, legacy-vs-config bit-for-bit
+equivalence, and the fleet Router's columnar aggregation.
+
+Determinism note (same as tests/test_event_driven.py): the streaming
+loader is a REAL thread, so ``init_s``/``exec_s``/``avg_bytes``/cache
+hit-miss splits and restream byte counts jitter between ANY two runs.
+Every cross-RUN comparison here therefore uses ``_response_fields``
+(virtual-time / scheduling fields only) — while the reducers
+(miss/rejection/priority rates, per-priority stats, prediction error)
+depend only on those deterministic fields and must agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from serving_scenarios import (Scenario, ScenarioRun, build_models,
+                               make_engine, tok)
+from test_event_driven import _response_fields, _scenario_matrix
+from test_router import mk_fleet, mk_trace
+from repro.core.latency_model import BatchLatencyEstimator
+from repro.serving.clock import SimClock
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request, Response
+from repro.serving.response_table import (STATUS_CODES, ResponseTable,
+                                          ResponseView)
+from repro.serving.router import Router
+from repro.serving.stream import RequestStream
+from repro.serving.types import (deadline_miss_rate, per_priority_stats,
+                                 prediction_error, priority_miss_rate,
+                                 rejection_rate, response_columns,
+                                 status_counts)
+
+NAMES = ("a", "b", "c")
+
+
+@pytest.fixture(scope="module")
+def models():
+    return build_models(NAMES)
+
+
+# ---------------------------------------------------------------------------
+# table units
+# ---------------------------------------------------------------------------
+
+def _sample_responses():
+    return [
+        Response("a", 0.05, 0.01, 0.04, 1 << 20, avg_bytes=0.5e6,
+                 cache_hits=3, cache_misses=1, cache_hit_rate=0.75,
+                 arrival_s=0.1, queue_s=0.02, batch_size=2,
+                 deadline_s=0.4, priority=2.0, req_id=7, kv_bytes=64,
+                 predicted_s=0.045, charged_s=0.05),
+        Response("b", 0.01, 0.0, 0.0, 0, status="rejected",
+                 arrival_s=0.2, deadline_s=0.25, req_id=8),
+        Response("a", 0.02, 0.0, 0.0, 0, status="failed",
+                 arrival_s=0.3, priority=0.5),          # req_id None
+        Response("c", 0.03, 0.0, 0.03, 0, arrival_s=0.4,
+                 deadline_s=math.inf, req_id=9),        # inf deadline
+    ]
+
+
+def test_roundtrip_preserves_every_field_but_result():
+    rs = _sample_responses()
+    t = ResponseTable.from_responses(rs)
+    assert len(t) == len(rs) and bool(t)
+    assert t.to_responses() == rs               # dataclass equality
+    assert t.vocab == ["a", "b", "c"]           # first-seen interning
+
+
+def test_view_surface_matches_response():
+    rs = _sample_responses()
+    t = ResponseTable.from_responses(rs)
+    v = t[0]
+    assert isinstance(v, ResponseView)
+    assert (v.model, v.status, v.req_id) == ("a", "ok", 7)
+    assert v.result is None
+    assert v.finish_s == rs[0].finish_s
+    assert v.deadline_met == rs[0].deadline_met is True
+    assert t[2].req_id is None                  # -1 decodes back to None
+    assert t[2].deadline_s is None              # NaN decodes back to None
+    assert t[3].deadline_s == math.inf          # ±inf preserved, not None
+    assert t[3].deadline_met is None            # inf deadline never judged
+    assert t[-1].model == "c"                   # negative indexing
+    with pytest.raises(IndexError):
+        t[len(rs)]
+
+
+def test_getitem_rejects_non_int():
+    t = ResponseTable.from_responses(_sample_responses())
+    with pytest.raises(TypeError, match="take"):
+        t[[0, 1]]
+    with pytest.raises(TypeError):
+        t[0:2]
+
+
+def test_iteration_and_status_codes():
+    t = ResponseTable.from_responses(_sample_responses())
+    assert [v.status for v in t] == ["ok", "rejected", "failed", "ok"]
+    assert list(t.column("status")) == [STATUS_CODES[s] for s in
+                                        ("ok", "rejected", "failed", "ok")]
+
+
+def test_chunk_boundaries_are_invisible():
+    rs = [Response("m", float(i), 0.0, 0.0, 0, arrival_s=float(i),
+                   req_id=i) for i in range(10)]
+    t = ResponseTable.from_responses(rs, chunk_rows=3)   # forces 4 chunks
+    assert t.to_responses() == rs
+    assert np.array_equal(t.column("latency_s"),
+                          np.arange(10, dtype=np.float64))
+    # appending after a column() read invalidates the cache
+    t.append("m", latency_s=10.0, arrival_s=10.0, req_id=10)
+    assert len(t) == 11 and t.column("latency_s")[-1] == 10.0
+
+
+def test_take_reorders_and_reindexes_vocab():
+    t = ResponseTable.from_responses(_sample_responses())
+    sub = t.take([3, 0])
+    assert len(sub) == 2
+    assert [v.model for v in sub] == ["c", "a"]
+    assert sorted(sub.vocab) == ["a", "c"]      # compacted to used models
+    assert sub.to_responses() == [t[3].to_response(), t[0].to_response()]
+    assert len(t.take([])) == 0
+
+
+def test_extend_remaps_vocab():
+    rs = _sample_responses()
+    t1 = ResponseTable.from_responses(rs[:2])
+    t2 = ResponseTable.from_responses(rs[2:])
+    t1.extend(t2)
+    assert t1.to_responses() == rs
+    t1.extend(ResponseTable())                  # empty extend is a no-op
+    assert len(t1) == len(rs)
+
+
+def test_reducer_columns_match_object_extraction():
+    rs = _sample_responses()
+    t = ResponseTable.from_responses(rs)
+    co, cc = response_columns(rs), response_columns(t)
+    assert set(co) == set(cc)
+    assert co["vocab"] == cc["vocab"]
+    for k in co:
+        if k == "vocab":
+            continue
+        assert np.array_equal(co[k], cc[k], equal_nan=True), k
+
+
+# ---------------------------------------------------------------------------
+# object vs columnar equivalence matrix (every scheduler x knob combo)
+# ---------------------------------------------------------------------------
+
+def _run_warm(sc: Scenario, models, *, use_config: bool = True,
+              result_mode: str = "object") -> ScenarioRun:
+    """Scenario.run with the test_event_driven warmup (budget > combined,
+    every model pre-streamed) so two runs are schedule-deterministic."""
+    eng = make_engine(models, budget_frac=1.5, **sc.engine_kw)
+    rng = np.random.default_rng(0)
+    for n in models:
+        eng.submit(Request(model=n, tokens=tok(rng), arrival_s=0.0))
+    eng.run_all()
+    clock = SimClock(exec_time=sc.exec_time, batch_growth=sc.batch_growth)
+    cfg = ServeConfig(
+        scheduler=sc.scheduler, batcher=sc.batcher, slo=sc.slo,
+        admission=sc.admission, preempt=sc.preempt, batch_cap=sc.batch_cap,
+        cost_model=BatchLatencyEstimator(priors=sc.priors_for(models),
+                                         growth=sc.batch_growth),
+        result_mode=result_mode, **sc.serve_kw)
+    stream = RequestStream.from_trace(list(sc.trace))
+    if use_config:
+        responses = eng.serve(stream, clock=clock, config=cfg)
+    else:
+        with pytest.warns(DeprecationWarning):
+            responses = eng.serve(
+                stream, clock=clock, scheduler=sc.scheduler,
+                batcher=sc.batcher, slo=sc.slo, admission=sc.admission,
+                preempt=sc.preempt, batch_cap=sc.batch_cap,
+                cost_model=BatchLatencyEstimator(
+                    priors=sc.priors_for(models),
+                    growth=sc.batch_growth),
+                result_mode=result_mode, **sc.serve_kw)
+    return ScenarioRun(engine=eng, clock=clock, responses=responses)
+
+
+MATRIX = ["fifo+batch", "arrival", "static", "slo+admission+cap",
+          "slo+preempt", "slo+replan"]
+
+
+def _assert_reducers_identical(obj, col, label):
+    """Every shared reducer must agree bit-for-bit across storage modes
+    (both route through response_columns into one numpy kernel)."""
+    assert deadline_miss_rate(obj) == deadline_miss_rate(col), label
+    assert rejection_rate(obj) == rejection_rate(col), label
+    assert priority_miss_rate(obj) == priority_miss_rate(col), label
+    assert status_counts(obj) == status_counts(col), label
+    assert per_priority_stats(obj) == per_priority_stats(col), label
+    assert prediction_error(obj) == prediction_error(col), label
+
+
+@pytest.mark.parametrize("name", MATRIX)
+def test_columnar_matches_object_mode(models, name):
+    sc = _scenario_matrix(models)[name]
+    obj = _run_warm(sc, models, result_mode="object")
+    col = _run_warm(sc, models, result_mode="columnar")
+    assert isinstance(col.responses, ResponseTable), name
+    assert len(obj.responses) == len(col.responses), name
+    for a, b in zip(obj.responses, col.responses):
+        assert _response_fields(a) == _response_fields(b), name
+        assert (a.predicted_s, a.charged_s, a.kv_bytes) == \
+            (b.predicted_s, b.charged_s, b.kv_bytes), name
+    _assert_reducers_identical(obj.responses, col.responses, name)
+    assert obj.engine.slo_report(obj.responses) \
+        == col.engine.slo_report(col.responses), name
+    assert obj.batch_models() == col.batch_models(), name
+    # ScenarioRun reductions work identically over the table's row views
+    assert [r.req_id for r in obj.served()] \
+        == [r.req_id for r in col.served()], name
+    assert len(obj.rejected()) == len(col.rejected()), name
+
+
+@pytest.mark.parametrize("name", MATRIX)
+def test_legacy_kwargs_match_config_surface(models, name):
+    """serve(**legacy) and serve(config=ServeConfig(...)) must be
+    bit-for-bit identical: same responses (deterministic fields), same
+    schedule, same report."""
+    sc = _scenario_matrix(models)[name]
+    via_config = _run_warm(sc, models, use_config=True)
+    via_kwargs = _run_warm(sc, models, use_config=False)
+    assert len(via_config.responses) == len(via_kwargs.responses), name
+    for a, b in zip(via_config.responses, via_kwargs.responses):
+        assert _response_fields(a) == _response_fields(b), name
+        if a.result is None:
+            assert b.result is None, name
+        else:
+            assert np.array_equal(np.asarray(a.result),
+                                  np.asarray(b.result)), name
+    assert via_config.batch_models() == via_kwargs.batch_models(), name
+    assert via_config.engine.slo_report(via_config.responses) \
+        == via_kwargs.engine.slo_report(via_kwargs.responses), name
+
+
+def test_session_config_is_stored(models):
+    eng = make_engine(models)
+    cfg = ServeConfig(scheduler="slo", result_mode="columnar")
+    ses = eng.serve_session(RequestStream.from_trace([]), config=cfg)
+    assert ses.config is cfg
+    assert isinstance(ses.responses, ResponseTable)
+
+
+# ---------------------------------------------------------------------------
+# fleet: Router aggregates per-replica tables without Response objects
+# ---------------------------------------------------------------------------
+
+def _run_fleet(models, mode: str):
+    fleet = mk_fleet(models, config=ServeConfig(scheduler="fifo",
+                                                result_mode=mode))
+    router = Router(fleet, seed=0)
+    responses = router.serve(list(mk_trace(40.0, 1.0)))
+    return router, responses
+
+
+def test_router_columnar_matches_object(models):
+    r_obj, obj = _run_fleet(models, "object")
+    r_col, col = _run_fleet(models, "columnar")
+    assert isinstance(col, ResponseTable)
+    assert len(obj) == len(col)
+    for a, b in zip(obj, col):                  # arrival order preserved
+        assert _response_fields(a) == _response_fields(b)
+    rep_o, rep_c = r_obj.report(obj), r_col.report(col)
+    # restream bytes race the real loader thread (jitter between ANY two
+    # runs) — every other fleet counter/rate is virtual-time exact
+    for k in ("requests", "served", "rejected", "failed", "miss_rate",
+              "rejection_rate", "bad_rate", "retries", "gave_up",
+              "dup_suppressed"):
+        assert rep_o[k] == rep_c[k], k
+    assert rep_o.per_replica.keys() == rep_c.per_replica.keys()
+    for rid in rep_o.per_replica:
+        a, b = rep_o.per_replica[rid], rep_c.per_replica[rid]
+        for k in ("rid", "dead", "wedged", "slow_factor", "batches",
+                  "breaker", "breaker_transitions"):
+            assert a[k] == b[k], (rid, k)
+
+
+def test_router_rejects_mixed_result_modes(models):
+    fleet = mk_fleet(models, n=2, config=ServeConfig())
+    fleet[1].start(config=ServeConfig(result_mode="columnar"))
+    router = Router(fleet, seed=0)
+    with pytest.raises(ValueError, match="mixed result modes"):
+        router.serve(list(mk_trace(10.0, 0.2)))

@@ -1,0 +1,289 @@
+"""ServeConfig + typed-report surface tests (PR 10).
+
+Covers the API-consolidation satellites:
+
+  * ``ServeConfig`` construction-time validation (bad knobs fail at the
+    dataclass, not deep inside the serve loop);
+  * the legacy loose-kwarg merge: ``serve(**legacy)`` still works,
+    explicit kwargs win over ``config=`` fields, any loose kwarg emits a
+    ``DeprecationWarning``, unknown names raise ``TypeError``;
+  * CLI derivation: ``add_serve_config_flags`` registers the historical
+    flag spellings with the dataclass's defaults/choices, and
+    ``serve_config_from_args`` round-trips them (tristate auto/on/off ->
+    None/True/False);
+  * the ``tools/lint_serve_config.py`` invariant, asserted here too so
+    plain pytest catches drift without the CI lint job;
+  * report dataclasses: ``as_dict``/``from_dict`` round-trips,
+    mapping-style ``rep["field"]`` migration access, NaN-aware equality,
+    and the ``WINDOWED_FIELDS`` labels.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import warnings
+
+import pytest
+
+from repro.serving.config import (LEGACY_SERVE_KWARGS, RESULT_MODES,
+                                  SCHEDULERS, ServeConfig,
+                                  add_serve_config_flags, cli_fields,
+                                  resolve_serve_config,
+                                  serve_config_from_args)
+from repro.serving.reports import (FleetReport, ModelReport,
+                                   PriorityStats, ReplicaHealth,
+                                   SLOReport)
+from repro.serving.types import SLOConfig
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig validation
+# ---------------------------------------------------------------------------
+
+def test_defaults_construct():
+    cfg = ServeConfig()
+    assert cfg.scheduler == "arrival"
+    assert cfg.step_mode == "event"
+    assert cfg.result_mode == "object"
+
+
+@pytest.mark.parametrize("bad", [
+    dict(scheduler="lifo"),
+    dict(step_mode="sometimes"),
+    dict(result_mode="arrow"),
+    dict(poll_interval_s=0.0),
+    dict(poll_interval_s=-1.0),
+    dict(speculative_lookahead_ops=-1),
+    dict(replan_drift=0.0),
+    dict(replan_min_observed=0),
+    dict(mix_halflife_s=0.0),
+])
+def test_validation_rejects_bad_knobs(bad):
+    with pytest.raises(ValueError):
+        ServeConfig(**bad)
+
+
+def test_frozen():
+    cfg = ServeConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.scheduler = "slo"
+
+
+# ---------------------------------------------------------------------------
+# legacy kwarg merge
+# ---------------------------------------------------------------------------
+
+def test_resolve_none_config_no_kwargs_is_defaults():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no warning may fire
+        cfg = resolve_serve_config(None, {})
+    assert cfg == ServeConfig()
+
+
+def test_resolve_passes_config_through_untouched():
+    base = ServeConfig(scheduler="slo", result_mode="columnar")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_serve_config(base, {}) is base
+
+
+def test_loose_kwarg_warns_and_merges():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        cfg = resolve_serve_config(None, {"scheduler": "slo"})
+    assert cfg.scheduler == "slo"
+    assert cfg.step_mode == "event"             # untouched default
+
+
+def test_explicit_kwarg_wins_over_config_field():
+    base = ServeConfig(scheduler="fifo", replan_drift=0.5)
+    with pytest.warns(DeprecationWarning):
+        cfg = resolve_serve_config(base, {"scheduler": "slo"})
+    assert cfg.scheduler == "slo"
+    assert cfg.replan_drift == 0.5              # config field survives
+
+
+def test_unknown_kwarg_raises_typeerror():
+    with pytest.raises(TypeError, match="unknown serve"):
+        resolve_serve_config(None, {"schedular": "slo"})
+
+
+def test_merge_revalidates():
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
+        resolve_serve_config(None, {"step_mode": "sometimes"})
+
+
+def test_slo_kwarg_merges():
+    slo = SLOConfig(default_slo_s=0.1)
+    with pytest.warns(DeprecationWarning):
+        cfg = resolve_serve_config(None, {"slo": slo, "admission": True})
+    assert cfg.slo is slo and cfg.admission is True
+
+
+# ---------------------------------------------------------------------------
+# lint invariant (mirrors tools/lint_serve_config.py)
+# ---------------------------------------------------------------------------
+
+def test_fields_match_legacy_kwargs_plus_result_mode():
+    fields = {f.name for f in dataclasses.fields(ServeConfig)}
+    assert fields == set(LEGACY_SERVE_KWARGS) | {"result_mode"}
+
+
+def test_lint_tool_agrees():
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "tools" \
+        / "lint_serve_config.py"
+    spec = importlib.util.spec_from_file_location("lint_serve_config",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.check() == []
+
+
+# ---------------------------------------------------------------------------
+# CLI derivation
+# ---------------------------------------------------------------------------
+
+def test_cli_flags_keep_historical_spellings():
+    flags = {f.metadata["cli"] for f in cli_fields()}
+    assert {"--scheduler", "--step-mode", "--batch-cap", "--replan",
+            "--replan-drift", "--result-mode", "--admission",
+            "--preempt"} <= flags
+    for f in cli_fields():
+        assert f.metadata["cli"] == "--" + f.name.replace("_", "-")
+
+
+def test_cli_roundtrip_defaults():
+    ap = add_serve_config_flags(argparse.ArgumentParser())
+    cfg = serve_config_from_args(ap.parse_args([]))
+    assert cfg == ServeConfig()
+
+
+def test_cli_roundtrip_explicit():
+    ap = add_serve_config_flags(argparse.ArgumentParser())
+    args = ap.parse_args(["--scheduler", "slo", "--batch-cap", "off",
+                          "--admission", "on", "--replan",
+                          "--replan-drift", "0.7",
+                          "--result-mode", "columnar"])
+    cfg = serve_config_from_args(args)
+    assert cfg.scheduler == "slo"
+    assert cfg.batch_cap is False               # tristate off -> False
+    assert cfg.admission is True                # tristate on  -> True
+    assert cfg.preempt is None                  # tristate auto -> None
+    assert cfg.replan is True
+    assert cfg.replan_drift == 0.7
+    assert cfg.result_mode == "columnar"
+
+
+def test_cli_choices_come_from_the_dataclass():
+    ap = add_serve_config_flags(argparse.ArgumentParser())
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--scheduler", "lifo"])
+    for val in SCHEDULERS:
+        assert ap.parse_args(["--scheduler", val]).scheduler == val
+    for val in RESULT_MODES:
+        assert ap.parse_args(["--result-mode", val]).result_mode == val
+
+
+def test_cli_overrides_for_non_cli_fields():
+    ap = add_serve_config_flags(argparse.ArgumentParser())
+    slo = SLOConfig(default_slo_s=0.2)
+    cfg = serve_config_from_args(ap.parse_args([]), slo=slo)
+    assert cfg.slo is slo
+
+
+# ---------------------------------------------------------------------------
+# typed reports
+# ---------------------------------------------------------------------------
+
+def _sample_slo_report() -> SLOReport:
+    return SLOReport(
+        requests=10, served=8, miss_rate=0.25, rejection_rate=0.2,
+        priority_miss_rate=0.3,
+        per_priority={1.0: PriorityStats(requests=6, served=5, rejected=1,
+                                         miss_rate=0.2,
+                                         rejection_rate=1 / 6,
+                                         p50_s=0.05, p99_s=0.09),
+                      2.0: PriorityStats(requests=4, served=3, rejected=1,
+                                         miss_rate=1 / 3,
+                                         rejection_rate=0.25,
+                                         p50_s=float("nan"),
+                                         p99_s=float("nan"))},
+        preemptions=2, deferred_joins=1,
+        calibration={"a": {"samples": 4, "calibrated": False}})
+
+
+def _sample_fleet_report() -> FleetReport:
+    return FleetReport(
+        requests=20, served=17, rejected=2, failed=1, miss_rate=0.1,
+        rejection_rate=0.1, bad_rate=0.2, retries=3, gave_up=1,
+        dup_suppressed=1, restream_bytes=1 << 20,
+        per_replica={0: ReplicaHealth(rid=0, batches=9, breaker="closed"),
+                     1: ReplicaHealth(rid=1, dead=True, breaker="open",
+                                      breaker_transitions=2)})
+
+
+@pytest.mark.parametrize("rep,cls", [
+    (_sample_slo_report(), SLOReport),
+    (_sample_fleet_report(), FleetReport),
+    (ModelReport(requests=5, peak_bytes=1 << 20, avg_bytes=0.5e6,
+                 cache_hits=3, cache_misses=2), ModelReport),
+    (ReplicaHealth(rid=2, load=4, clock_s=1.5), ReplicaHealth),
+    (PriorityStats(requests=3, served=2, p50_s=float("nan")),
+     PriorityStats),
+])
+def test_as_dict_from_dict_roundtrip(rep, cls):
+    d = rep.as_dict()
+    assert isinstance(d, dict)
+    back = cls.from_dict(d)
+    assert back == rep                          # NaN-aware equality
+    assert back.as_dict().keys() == d.keys()
+
+
+def test_as_dict_nests_plain_dicts():
+    d = _sample_slo_report().as_dict()
+    assert isinstance(d["per_priority"][1.0], dict)
+    assert d["per_priority"][1.0]["served"] == 5
+    f = _sample_fleet_report().as_dict()
+    assert isinstance(f["per_replica"][0], dict)
+    assert f["per_replica"][1]["dead"] is True
+
+
+def test_mapping_style_access_for_migration():
+    rep = _sample_slo_report()
+    assert rep["miss_rate"] == rep.miss_rate
+    assert rep["per_priority"][1.0]["p50_s"] == 0.05
+    assert "served" in rep and "nope" not in rep
+    assert set(rep.keys()) == {f.name
+                               for f in dataclasses.fields(SLOReport)}
+    with pytest.raises(KeyError):
+        rep["nope"]
+
+
+def test_nan_aware_equality():
+    a = PriorityStats(p50_s=float("nan"), p99_s=float("nan"))
+    b = PriorityStats(p50_s=float("nan"), p99_s=float("nan"))
+    assert a == b
+    assert a != PriorityStats(p50_s=0.1, p99_s=float("nan"))
+    # still class-exact: a dict with the same payload is not a report
+    assert (a == a.as_dict()) is False
+
+
+def test_model_report_windowed_fields_and_hit_rate():
+    rep = ModelReport(requests=4, cache_hits=3, cache_misses=1)
+    assert rep.cache_hit_rate == 0.75
+    assert ModelReport(requests=0).cache_hit_rate == 0.0
+    assert set(ModelReport.WINDOWED_FIELDS) == {
+        "requests", "peak_bytes", "avg_bytes", "cache_hits",
+        "cache_misses"}
+    # exact lifetime counters are never labeled windowed
+    assert SLOReport.WINDOWED_FIELDS == ()
+    assert FleetReport.WINDOWED_FIELDS == ()
+
+
+def test_reports_are_unhashable():
+    with pytest.raises(TypeError):
+        hash(_sample_slo_report())
+    assert math.isnan(_sample_slo_report()
+                      .per_priority[2.0].p50_s)

@@ -1,0 +1,66 @@
+"""Lint check (PR 10): the deprecated loose-kwarg surface of
+``ServingEngine.serve`` and the ``ServeConfig`` dataclass must stay in
+sync — a field added to one but not the other silently breaks either the
+legacy-kwarg merge path (``resolve_serve_config``) or the config surface
+itself.
+
+The invariant:
+
+    set(ServeConfig fields) == set(LEGACY_SERVE_KWARGS) | {"result_mode"}
+
+``result_mode`` is the one field introduced WITH the config (it never
+existed as a loose kwarg); every other field must appear in
+``LEGACY_SERVE_KWARGS`` so old call sites keep resolving. The check also
+verifies that every CLI-exposed field's flag spelling matches its field
+name (dashes-for-underscores), so ``add_serve_config_flags`` keeps the
+historical ``--batch-cap``-style spellings.
+
+Run: ``PYTHONPATH=src python tools/lint_serve_config.py``
+Exit 0 = in sync; exit 1 with a field-level diff otherwise. CI runs this
+in the lint job; ``tests/test_serve_config.py`` asserts the same
+invariant so plain pytest catches drift too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+
+def check() -> list:
+    from repro.serving.config import LEGACY_SERVE_KWARGS, ServeConfig, \
+        cli_fields
+
+    errors = []
+    fields = {f.name for f in dataclasses.fields(ServeConfig)}
+    expected = set(LEGACY_SERVE_KWARGS) | {"result_mode"}
+    missing = expected - fields
+    extra = fields - expected
+    if missing:
+        errors.append(f"ServeConfig is missing field(s) {sorted(missing)} "
+                      "listed in LEGACY_SERVE_KWARGS")
+    if extra:
+        errors.append(f"ServeConfig field(s) {sorted(extra)} are not in "
+                      "LEGACY_SERVE_KWARGS — add them there (or, for a "
+                      "genuinely new config-only knob, extend this "
+                      "check's allowance the way result_mode is)")
+    for f in cli_fields():
+        want = "--" + f.name.replace("_", "-")
+        got = f.metadata["cli"]
+        if got != want:
+            errors.append(f"CLI flag {got!r} does not match field "
+                          f"{f.name!r} (expected {want!r})")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"lint_serve_config: {e}", file=sys.stderr)
+    if not errors:
+        print("lint_serve_config: ServeConfig and LEGACY_SERVE_KWARGS "
+              "in sync")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
